@@ -1,0 +1,42 @@
+"""Shared benchmark fixtures: a production-shaped rule system (scaled to
+this container) and timing helpers."""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import jax
+import numpy as np
+
+from repro.core.compiler import compile_rules
+from repro.core.encoder import encode_queries
+from repro.core.engine import ErbiumEngine
+from repro.core.rules import generate_queries, generate_rules
+
+# scaled-down production shape (paper: 160k rules; CPU container: 4k)
+N_RULES = 4_096
+N_QUERIES = 8_192
+
+
+@lru_cache(maxsize=None)
+def rule_system(version: int):
+    rs = generate_rules(N_RULES, version=version, seed=42)
+    table = compile_rules(rs)
+    qs = generate_queries(rs, N_QUERIES, seed=43)
+    enc = encode_queries(table, qs)
+    return rs, table, qs, enc
+
+
+def time_us(fn, *args, repeats: int = 3, warmup: int = 1, **kw) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

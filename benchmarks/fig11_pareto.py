@@ -1,0 +1,32 @@
+"""Paper Fig. 11: latency/throughput Pareto front over configurations."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from benchmarks.fig7_10_parallel import _stage_times
+from repro.core.deployment import Config, pareto, sweep
+
+
+def run():
+    st = _stage_times()
+    cfgs = [Config(p, w, k, e)
+            for p in (1, 2, 4) for w in (1, 2, 4)
+            for k in (1, 2, 4) for e in (1, 2, 4)
+            if w >= k and p >= w and k * e <= 4]
+    perfs = sweep(cfgs, st, [4096])
+    front = pareto(perfs)
+    for p in front:
+        emit(f"fig11/front_{p.config.label().replace(' ', '')}",
+             p.latency_us, f"qps={p.throughput_qps:.3e}")
+    # the paper's selection logic: best config under a latency cap,
+    # and best config above a throughput floor
+    floor = sorted((p for p in perfs
+                    if p.throughput_qps >= 0.5 * max(
+                        q.throughput_qps for q in perfs)),
+                   key=lambda p: p.latency_us)[0]
+    emit("fig11/best_under_throughput_floor", floor.latency_us,
+         f"config={floor.config.label()};qps={floor.throughput_qps:.3e}")
+    return front
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Paper Figs. 7-10: the four parallel-configuration series over
+(p processes, w workers, k kernels, e engines/kernel), from measured stage
+costs + the calibrated deployment model.
+
+Fig 7: engines per kernel (latency down, sub-linear throughput)
+Fig 8: uniform scaling (throughput up, per-request latency up)
+Fig 9: many workers per kernel (XRT-scheduler serialisation)
+Fig 10: many processes per worker (worker saturation at ~16 p/w)
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, rule_system
+from repro.core.aggregator import Batch
+from repro.core.deployment import Config, evaluate
+from repro.core.engine import ErbiumEngine
+from repro.core.wrapper import measure_stage_times
+
+BATCH = 4_096
+
+
+def _stage_times():
+    rs, table, qs, enc = rule_system(2)
+    eng = ErbiumEngine(table, backend="ref")
+
+    def make_batch(n):
+        return Batch(0, [qs[i % len(qs)] for i in range(n)], [(0, -1)] * n)
+
+    return measure_stage_times(eng, make_batch, (256, 1024, 4096),
+                               repeats=2)
+
+
+def run():
+    st = _stage_times()
+    series = {
+        "fig7_engines": [Config(1, 1, 1, e) for e in (1, 2, 4)],
+        "fig8_uniform": [Config(c, c, c, 1) for c in (1, 2, 4)],
+        "fig9_workers_per_kernel": [Config(w, w, 1, 4)
+                                    for w in (1, 2, 4, 8)],
+        "fig10_procs_per_worker": [Config(p, 1, 1, 4)
+                                   for p in (1, 2, 8, 16, 32)],
+    }
+    out = {}
+    for name, cfgs in series.items():
+        for c in cfgs:
+            perf = evaluate(c, st, BATCH)
+            emit(f"{name}/{c.label().replace(' ', '')}", perf.latency_us,
+                 f"qps={perf.throughput_qps:.3e}")
+            out[(name, c)] = perf
+    # derived paper claims
+    e1 = out[("fig7_engines", Config(1, 1, 1, 1))]
+    e4 = out[("fig7_engines", Config(1, 1, 1, 4))]
+    emit("fig7/4engines_speedup", 0.0,
+         f"latency_ratio={e1.latency_us / e4.latency_us:.2f} "
+         f"(sub-linear: <4 due to 30% clock derate)")
+    p16 = out[("fig10_procs_per_worker", Config(16, 1, 1, 4))]
+    p32 = out[("fig10_procs_per_worker", Config(32, 1, 1, 4))]
+    emit("fig10/worker_saturation", 0.0,
+         f"qps_gain_16to32={p32.throughput_qps / p16.throughput_qps:.2f} "
+         f"(saturates ~1.0)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

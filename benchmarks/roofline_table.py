@@ -1,0 +1,32 @@
+"""Roofline table (this assignment's §Roofline): three terms per
+(arch x shape x mesh) cell from the dry-run artifacts."""
+from __future__ import annotations
+
+from pathlib import Path
+
+from benchmarks.common import emit
+from repro.launch.roofline import load_all, table_markdown
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def run():
+    rows = load_all(ART)
+    if not rows:
+        emit("roofline/missing", 0.0,
+             "run: python -m repro.launch.dryrun --all --mesh both")
+        return []
+    rows.sort(key=lambda r: (r.mesh, r.arch, r.shape))
+    for r in rows:
+        emit(f"roofline/{r.arch}_{r.shape}_{r.mesh}", r.step_s * 1e6,
+             f"dom={r.dominant};comp={r.compute_s:.4g};mem={r.memory_s:.4g}"
+             f";coll={r.collective_s:.4g};useful={r.usefulness:.2f}"
+             f";mfu_bound={r.mfu_bound:.3f}")
+    out = Path(ART).parent / "roofline_table.md"
+    out.write_text(table_markdown(rows))
+    emit("roofline/table_written", 0.0, str(out))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows. Usage: PYTHONPATH=src python -m benchmarks.run [--only fig4,...]
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig4,table2")
+    args = ap.parse_args()
+
+    from benchmarks import (fig4_throughput, fig6_overheads,
+                            fig7_10_parallel, fig11_pareto, fig12_cpu_accel,
+                            roofline_table, table2_3_cost)
+    suites = {
+        "fig4": fig4_throughput.run,
+        "fig6": fig6_overheads.run,
+        "fig7_10": fig7_10_parallel.run,
+        "fig11": fig11_pareto.run,
+        "fig12": fig12_cpu_accel.run,
+        "table2": table2_3_cost.run,
+        "roofline": roofline_table.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

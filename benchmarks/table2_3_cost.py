@@ -1,0 +1,37 @@
+"""Paper Tables 2-3: deployment cost estimates (reproduced exactly from the
+paper's unit prices) + the TPU v5e re-parameterisation of the same
+CPU:accelerator balance analysis."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.cost_model import (PAPER_TABLE2_TOTALS, TPUCostParams,
+                                   table2, table3, tpu_balance)
+
+
+def run():
+    ok = True
+    for d in table2():
+        exp = PAPER_TABLE2_TOTALS.get(d.name)
+        dev = abs(d.total_usd - exp) / exp if exp else 0.0
+        ok &= dev < 0.03
+        emit(f"table2/{d.name.replace(' ', '_').replace('/', '-')}", 0.0,
+             f"total=${d.total_usd / 1e6:.2f}M;paper=${(exp or 0) / 1e6:.2f}M"
+             f";dev={dev:.1%}")
+    emit("table2/validated_against_paper", 0.0, f"ok={ok}")
+
+    for d in table3():
+        emit(f"table3/{d.name.replace(' ', '_').replace('/', '-')}", 0.0,
+             f"total=${d.total_usd / 1e6:.2f}M")
+
+    # TPU v5e: same imbalance analysis on our target hardware
+    p = TPUCostParams()
+    for qps in (2e8, 2e9, 2e10):
+        r = tpu_balance(p, qps)
+        emit(f"tpu_balance/qps{qps:.0e}", 0.0,
+             f"chips={r['chips_bought']:.1f};util={r['accel_utilisation']:.2f}"
+             f";cost_ratio_vs_cpu={r['cost_ratio_accel_vs_cpu']:.2f}")
+    return ok
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,7 @@
+"""Core: the paper's contribution — ERBIUM-on-TPU rule engine + the
+deployment/integration analysis layer (wrapper, aggregator, workload model,
+parallel-config analyzer, cost model)."""
+from repro.core.compiler import CompiledRuleTable, compile_rules  # noqa
+from repro.core.encoder import encode_queries  # noqa
+from repro.core.engine import ErbiumEngine  # noqa
+from repro.core.rules import RuleSet, generate_queries, generate_rules  # noqa

@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for the rule-match kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rule_match_ref(queries, mins, maxs, weights):
+    """Dense interval-stabbing rule match.
+
+    queries: (B, C) int32; mins/maxs: (R, C) int32; weights: (R,) int32
+    (padding rules carry weight < 0 and never-matching intervals).
+    Returns (best_weight (B,), best_idx (B,)) — highest weight among matching
+    rules, lowest index tie-break; (-1, -1) when nothing matches.
+    """
+    q = queries[:, None, :]                     # (B, 1, C)
+    ok = (q >= mins[None]) & (q <= maxs[None])  # (B, R, C)
+    matched = jnp.all(ok, axis=-1)              # (B, R)
+    score = jnp.where(matched, weights[None, :], -1)
+    best = jnp.max(score, axis=1)
+    idx = jnp.argmax(score, axis=1).astype(jnp.int32)  # first max == lowest idx
+    idx = jnp.where(best < 0, -1, idx)
+    return best.astype(jnp.int32), idx

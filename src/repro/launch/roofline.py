@@ -1,0 +1,103 @@
+"""Roofline terms from dry-run artifacts.
+
+TPU v5e hardware model (per the assignment):
+  197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+
+  compute term    = HLO_FLOPs(per device) / peak_FLOPs
+  memory term     = HLO_bytes(per device) / HBM_bw
+  collective term = ring-model wire bytes(per device) / link_bw
+
+HLO_FLOPs/bytes come from the repro HLO analyzer (hlo_analysis.py), which —
+unlike compiled.cost_analysis() — multiplies while-loop bodies by their trip
+counts (see tests/test_hlo_analysis.py).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s
+LINK_BW = 50e9           # B/s per ICI link
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+    hlo_bytes: float
+    coll_wire_bytes: float
+    n_devices: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Lower-bound step time (no overlap assumed = max of terms;
+        perfect overlap would be max, serial would be sum — report max)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def usefulness(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (global): remat/redundancy waste."""
+        total_hlo = self.hlo_flops * self.n_devices
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilisation upper bound at the roofline step time."""
+        denom = self.step_s * PEAK_FLOPS * self.n_devices
+        return self.model_flops / denom if denom else 0.0
+
+
+def from_record(rec: dict) -> Optional[Roofline]:
+    if not rec.get("ok"):
+        return None
+    h = rec["hlo"]
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=h["flops"] / PEAK_FLOPS,
+        memory_s=h["bytes"] / HBM_BW,
+        collective_s=h["collective_wire_bytes"] / LINK_BW,
+        model_flops=rec["model_flops"],
+        hlo_flops=h["flops"], hlo_bytes=h["bytes"],
+        coll_wire_bytes=h["collective_wire_bytes"],
+        n_devices=rec["n_devices"])
+
+
+def load_all(art_dir, variant: Optional[str] = "") -> List[Roofline]:
+    """variant="" -> baseline records only; None -> everything."""
+    out = []
+    for p in sorted(Path(art_dir).glob("*.json")):
+        rec = json.loads(p.read_text())
+        if variant is not None and rec.get("variant", "") != variant:
+            continue
+        r = from_record(rec)
+        if r is not None:
+            out.append(r)
+    return out
+
+
+def table_markdown(rows: List[Roofline]) -> str:
+    hdr = ("| arch | shape | mesh | compute(s) | memory(s) | collective(s) "
+           "| dominant | MODEL/HLO | MFU-bound |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.4g} "
+                 f"| {r.memory_s:.4g} | {r.collective_s:.4g} "
+                 f"| **{r.dominant}** | {r.usefulness:.2f} "
+                 f"| {r.mfu_bound:.3f} |\n")
+    return hdr + body

@@ -1,0 +1,175 @@
+"""Step builders shared by the dry-run, the trainer and the server:
+microbatched (grad-accumulation) train step, prefill step, decode step —
+each with full in/out shardings and donation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.launch.mesh import batch_axes_of
+from repro.models.registry import Model, build_model, make_inputs
+from repro.sharding.specs import (ShardCtx, cache_shardings, param_shardings,
+                                  param_specs)
+from repro.train.optimizer import AdamW, AdamWState
+
+
+def make_ctx(mesh, cell: Optional[ShapeCell], cfg: ModelConfig) -> ShardCtx:
+    """ShardCtx for a (mesh, shape-cell): decode/prefill cells get
+    sequence-sharded KV caches when kv-heads don't divide the model axis."""
+    baxes = batch_axes_of(mesh)
+    seq_axes = None
+    if cell is not None and cell.kind in ("prefill", "decode"):
+        if cell.global_batch == 1:
+            seq_axes = ("data", "model")
+        elif cfg.n_kv_heads % mesh.shape["model"] != 0:
+            seq_axes = ("model",)
+    return ShardCtx(mesh=mesh, batch_axes=baxes, fsdp_axis="data",
+                    model_axis="model", cache_seq_axes=seq_axes)
+
+
+def abstract_params(model: Model):
+    return jax.eval_shape(lambda k: model.init(k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def microbatches_for(cfg: ModelConfig, cell: ShapeCell, mesh,
+                     batch_axes=None) -> int:
+    """Largest M <= cfg.train_microbatches with (B/M) divisible by dp."""
+    axes = batch_axes or batch_axes_of(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in axes]))
+    m = min(cfg.train_microbatches, max(cell.global_batch // dp, 1))
+    while m > 1 and (cell.global_batch % m or
+                     (cell.global_batch // m) % dp):
+        m -= 1
+    return max(m, 1)
+
+
+def build_train_step(model: Model, ctx: ShardCtx, opt: AdamW,
+                     n_microbatches: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    cfg = model.cfg
+    accum_dtype = jnp.float32 if cfg.optimizer_dtype == "float32" \
+        else jnp.bfloat16
+
+    def constrain_batch(tree):
+        def one(t):
+            b = ctx.maybe(t.shape[0], ctx.batch_axes)
+            spec = P(*([b] + [None] * (t.ndim - 1)))
+            return jax.lax.with_sharding_constraint(
+                t, NamedSharding(ctx.mesh, spec))
+        return jax.tree_util.tree_map(one, tree)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        M = n_microbatches
+
+        def loss_fn(p, mb):
+            return model.loss(p, mb)
+
+        if M == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+        else:
+            mbs = jax.tree_util.tree_map(
+                lambda t: t.reshape((M, t.shape[0] // M) + t.shape[1:]),
+                batch)
+
+            def mb_body(acc, mb):
+                g_acc, l_acc = acc
+                mb = constrain_batch(mb)
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (g_sum, loss_sum), _ = jax.lax.scan(
+                mb_body, (zeros, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32) / M, g_sum)
+            loss = loss_sum / M
+
+        new_p, new_s, gnorm = opt.update(grads, opt_state, params)
+        return new_p, new_s, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def opt_state_shardings(pshard, mesh):
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=pshard, nu=pshard)
+
+
+def jit_train_step(model: Model, ctx: ShardCtx, opt: AdamW,
+                   batch_struct, n_microbatches: int = 1,
+                   zero1: bool = False):
+    """zero1=True: params replicated over the data axis (TP only), optimizer
+    states FSDP-sharded — removes the per-microbatch weight all-gathers of
+    ZeRO-3 at the cost of one param all-gather per step. Wins when params
+    are small relative to the per-step gather traffic (e.g. gemma3-1b)."""
+    import dataclasses
+
+    pstruct = abstract_params(model)
+    pshard = param_shardings(pstruct, model.cfg, ctx)
+    if zero1:
+        ctx_nofsdp = dataclasses.replace(ctx, fsdp_axis=None)
+        oshard = opt_state_shardings(pshard, ctx.mesh)
+        pshard = param_shardings(pstruct, model.cfg, ctx_nofsdp)
+    else:
+        oshard = opt_state_shardings(pshard, ctx.mesh)
+    bshard = ctx.batch_spec(batch_struct)
+    mshard = {"loss": NamedSharding(ctx.mesh, P()),
+              "grad_norm": NamedSharding(ctx.mesh, P())}
+    step = build_train_step(model, ctx, opt, n_microbatches)
+    jitted = jax.jit(step,
+                     in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, mshard),
+                     donate_argnums=(0, 1))
+    ostruct = jax.eval_shape(opt.init, pstruct)
+    return jitted, (pstruct, ostruct, pshard, oshard)
+
+
+def jit_prefill(model: Model, ctx: ShardCtx, batch_struct):
+    pstruct = abstract_params(model)
+    pshard = param_shardings(pstruct, model.cfg, ctx)
+    bshard = ctx.batch_spec(batch_struct)
+    jitted = jax.jit(lambda p, b: model.prefill(p, b),
+                     in_shardings=(pshard, bshard))
+    return jitted, (pstruct, pshard)
+
+
+def jit_decode(model: Model, ctx: ShardCtx, batch: int, seq_len: int):
+    pstruct = abstract_params(model)
+    pshard = param_shardings(pstruct, model.cfg, ctx)
+    cstruct = model.cache_struct(batch, seq_len)
+    cshard = cache_shardings(cstruct, model.cfg, ctx)
+    tok_sh = NamedSharding(
+        ctx.mesh, P(ctx.maybe(batch, ctx.batch_axes), None))
+    pos_sh = NamedSharding(ctx.mesh, P())
+    lg_sh = NamedSharding(
+        ctx.mesh, P(ctx.maybe(batch, ctx.batch_axes), None,
+                    ctx.maybe(model.cfg.vocab, ctx.model_axis)))
+    jitted = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, t, pos),
+                     in_shardings=(pshard, cshard, tok_sh, pos_sh),
+                     out_shardings=(lg_sh, cshard),
+                     donate_argnums=(1,))
+    tok_struct = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+    return jitted, (pstruct, cstruct, tok_struct, pos_struct)
+
+
+def cell_batch_struct(cfg: ModelConfig, cell: ShapeCell):
+    b = make_inputs(cfg, cell.global_batch, cell.seq_len, abstract=True)
+    if cell.kind == "prefill" and not cfg.encoder_only:
+        b.pop("labels", None)
+    return b

@@ -1,0 +1,28 @@
+"""Dense FFN blocks: SwiGLU / GeGLU (gated) and squared-ReLU / GELU MLPs."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.common import act_fn, dense_init, is_gated
+
+
+def init_ffn(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], d_model, d_ff, dtype),
+         "wo": dense_init(ks[1], d_ff, d_model, dtype)}
+    if is_gated(act):
+        p["wg"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def ffn_forward(params, x, act: str, shard=None):
+    f = act_fn(act)
+    h = x @ params["wi"].astype(x.dtype)
+    if is_gated(act):
+        g = x @ params["wg"].astype(x.dtype)
+        h = f(g) * h
+    else:
+        h = f(h)
+    if shard is not None:
+        h = shard(h)
+    return h @ params["wo"].astype(x.dtype)

@@ -1,0 +1,281 @@
+"""Mixture-of-Experts FFN with explicit expert/tensor parallelism via
+``shard_map``.
+
+Two parallel modes (chosen per architecture, see configs):
+
+- ``ep``  — experts sharded over the ``model`` mesh axis (requires
+  num_experts % tp == 0; e.g. qwen3: 128 experts over 16 => 8/device).
+  Each device dispatches the tokens routed to ITS experts into a
+  (E_loc, C, D) capacity buffer, runs the expert FFN, scatters back, and the
+  per-device partial outputs are summed with ``psum`` over ``model``.
+- ``tp``  — every device holds all experts but the expert d_ff is sharded
+  over ``model`` (grok-1: 8 experts < 16 devices). The d_ff partial products
+  are summed with ``psum`` over ``model``.
+
+Both modes implement FSDP explicitly: expert weights arrive sharded over the
+``data`` axis on the d_model dim and are all-gathered just-in-time inside the
+shard_map body (the gather is the FSDP weight collection, overlappable by the
+compiler with the dispatch compute).
+
+Token dispatch is the sort-based capacity-buffer scheme (Switch-style, with
+dropping): O(t log t) sort + O(t) scatter, no (tokens x experts x capacity)
+dispatch tensor is ever materialised.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import act_fn, dense_init, is_gated
+
+
+def init_moe(key, d_model: int, cfg, act: str, dtype) -> dict:
+    """cfg: MoEConfig."""
+    ks = jax.random.split(key, 4)
+    E, F = cfg.num_experts, cfg.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], d_model, E, jnp.float32),
+        "wi": _einit(ks[1], E, d_model, F, dtype),
+        "wo": _einit(ks[2], E, F, d_model, dtype),
+    }
+    if is_gated(act):
+        p["wg"] = _einit(ks[3], E, d_model, F, dtype)
+    return p
+
+
+def _einit(key, e, din, dout, dtype):
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (e, din, dout), jnp.float32)
+    return (w / np.sqrt(din)).astype(dtype)
+
+
+def capacity_for(tokens_local: int, num_experts: int, top_k: int,
+                 capacity_factor: float) -> int:
+    """Per-slot, per-expert capacity for a device-local token count."""
+    c = int(np.ceil(tokens_local * capacity_factor / num_experts))
+    c = max(c, min(tokens_local, 8))
+    return min(c, tokens_local)
+
+
+def _dispatch_compute(x_flat, expert_of_tok, wi, wg, wo, *, n_local: int,
+                      local_off, capacity: int, act: str):
+    """Route tokens to local experts via sort + capacity buffer; run FFN.
+
+    x_flat: (t, D); expert_of_tok: (t,) global expert id for this slot.
+    wi/wg: (E_loc, D, F); wo: (E_loc, F, D). local experts are
+    [local_off, local_off + n_local). Returns (t, D) per-token output
+    (zeros for tokens not local to this device or dropped).
+    """
+    t, D = x_flat.shape
+    f = act_fn(act)
+    local_e = expert_of_tok - local_off
+    is_local = (local_e >= 0) & (local_e < n_local)
+    key = jnp.where(is_local, local_e, n_local)          # sentinel at end
+    order = jnp.argsort(key)                              # stable
+    sorted_e = key[order]
+    counts = jnp.bincount(key, length=n_local + 1)
+    seg_start = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                                 jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(t) - seg_start[sorted_e]
+    valid = (sorted_e < n_local) & (pos < capacity)
+    slot = jnp.where(valid, sorted_e * capacity + pos, n_local * capacity)
+    x_sorted = x_flat[order]
+    buf = jnp.zeros((n_local * capacity, D), x_flat.dtype)
+    buf = buf.at[slot].set(jnp.where(valid[:, None], x_sorted, 0),
+                           mode="drop")
+    buf = buf.reshape(n_local, capacity, D)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, wi.astype(buf.dtype))
+    if wg is not None:
+        g = jnp.einsum("ecd,edf->ecf", buf, wg.astype(buf.dtype))
+        h = f(g) * h
+    else:
+        h = f(h)
+    y = jnp.einsum("ecf,efd->ecd", h, wo.astype(h.dtype))
+    y_flat = y.reshape(n_local * capacity, D)
+
+    out_sorted = jnp.where(valid[:, None],
+                           y_flat[jnp.minimum(slot, n_local * capacity - 1)],
+                           0)
+    out = jnp.zeros_like(x_flat).at[order].set(out_sorted)
+    return out
+
+
+def moe_forward(params, x, *, cfg, act: str, mesh, batch_axes: Tuple[str, ...],
+                fsdp_axis: str = "data", model_axis: str = "model",
+                weight_stationary: bool = False):
+    """MoE FFN. x: (B, S, D) sharded over batch_axes. Returns (B, S, D).
+
+    weight_stationary=True (decode-optimised path): expert weights are NEVER
+    gathered — tokens are all-gathered over the fsdp axis (tiny at decode
+    batch sizes), each device computes with its D-shard of the weights, and
+    partial products are psum'd over the fsdp axis. Turns the per-step
+    weight movement (params/16 per device) into one activation collective.
+    """
+    E, K = cfg.num_experts, cfg.top_k
+    tp = mesh.shape[model_axis]
+    mode = cfg.parallel_mode
+    if mode == "ep" and E % tp != 0:
+        mode = "tp"
+
+    wg = params.get("wg")
+    gated = wg is not None
+
+    if mode == "ep":
+        wspec = P(model_axis, fsdp_axis, None)
+        wospec = P(model_axis, None, fsdp_axis)
+    else:
+        wspec = P(None, fsdp_axis, model_axis)
+        wospec = P(None, model_axis, fsdp_axis)
+
+    xspec = P(batch_axes, None, None)
+
+    dp_total = int(np.prod([mesh.shape[a] for a in batch_axes]))
+    dp_fsdp = int(mesh.shape[fsdp_axis]) if fsdp_axis else 1
+    B, S, D = x.shape
+    t_local = max(1, (B // dp_total) * S)
+    cap = capacity_for(t_local, E, K, cfg.capacity_factor)
+    cap_ws = capacity_for(t_local * dp_fsdp, E, K, cfg.capacity_factor)
+
+    def body_ws(x_loc, router, wi, wg_, wo):
+        """Weight-stationary: gather tokens, never gather weights."""
+        b, s, d = x_loc.shape
+        t_loc = b * s
+        xf = x_loc.reshape(t_loc, d)
+        x_all = jax.lax.all_gather(xf, fsdp_axis, axis=0, tiled=True)
+        t_all = t_loc * dp_fsdp
+
+        logits = x_all.astype(jnp.float32) @ router
+        topv, topi = jax.lax.top_k(logits, K)
+        cw = jax.nn.softmax(topv, axis=-1)
+
+        rm = jax.lax.axis_index(model_axis)
+        rd = jax.lax.axis_index(fsdp_axis)
+        d_loc = wi.shape[1]
+        x_slice = jax.lax.dynamic_slice_in_dim(x_all, rd * d_loc, d_loc,
+                                               axis=1)
+        if mode == "ep":
+            n_local = E // tp
+            local_off = rm * n_local
+        else:
+            n_local = E
+            local_off = jnp.zeros((), jnp.int32)
+
+        f = act_fn(act)
+        acc = jnp.zeros((t_all, d_loc), x_loc.dtype)
+        for j in range(K):
+            # dispatch D-sliced tokens into the capacity buffer
+            local_e = topi[:, j] - local_off
+            is_local = (local_e >= 0) & (local_e < n_local)
+            key = jnp.where(is_local, local_e, n_local)
+            order = jnp.argsort(key)
+            sorted_e = key[order]
+            counts = jnp.bincount(key, length=n_local + 1)
+            seg_start = jnp.concatenate(
+                [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+            pos = jnp.arange(t_all) - seg_start[sorted_e]
+            valid = (sorted_e < n_local) & (pos < cap_ws)
+            slot = jnp.where(valid, sorted_e * cap_ws + pos,
+                             n_local * cap_ws)
+            buf = jnp.zeros((n_local * cap_ws, d_loc), x_loc.dtype)
+            buf = buf.at[slot].set(
+                jnp.where(valid[:, None], x_slice[order], 0), mode="drop")
+            buf = buf.reshape(n_local, cap_ws, d_loc)
+
+            h = jnp.einsum("ecd,edf->ecf", buf, wi.astype(buf.dtype))
+            h = jax.lax.psum(h, fsdp_axis)        # complete D contraction
+            if gated:
+                g = jnp.einsum("ecd,edf->ecf", buf, wg_.astype(buf.dtype))
+                g = jax.lax.psum(g, fsdp_axis)
+                h = f(g) * h
+            else:
+                h = f(h)
+            y = jnp.einsum("ecf,efd->ecd", h, wo.astype(h.dtype))
+            if mode != "ep":
+                y = jax.lax.psum(y, model_axis)   # complete F contraction
+            y_flat = y.reshape(n_local * cap_ws, d_loc)
+            out_sorted = jnp.where(
+                valid[:, None],
+                y_flat[jnp.minimum(slot, n_local * cap_ws - 1)], 0)
+            outj = jnp.zeros((t_all, d_loc), x_loc.dtype) \
+                .at[order].set(out_sorted)
+            acc = acc + cw[:, j, None].astype(acc.dtype) * outj
+        if mode == "ep":
+            acc = jax.lax.psum(acc, model_axis)   # combine expert groups
+        # back to this device's tokens and full D
+        mine = jax.lax.dynamic_slice_in_dim(acc, rd * t_loc, t_loc, axis=0)
+        mine = jax.lax.all_gather(mine, fsdp_axis, axis=1, tiled=True)
+        return mine.reshape(b, s, d)
+
+    def body(x_loc, router, wi, wg_, wo):
+        b, s, d = x_loc.shape
+        xf = x_loc.reshape(b * s, d)
+        # FSDP: collect the d_model (and for tp-mode d_ff) shards of weights
+        wi = jax.lax.all_gather(wi, fsdp_axis, axis=1 if mode == "ep" else 1,
+                                tiled=True)
+        wo = jax.lax.all_gather(wo, fsdp_axis, axis=2 if mode == "ep" else 2,
+                                tiled=True)
+        if gated:
+            wg_full = jax.lax.all_gather(wg_, fsdp_axis, axis=1, tiled=True)
+        else:
+            wg_full = None
+
+        logits = (xf.astype(jnp.float32) @ router)          # (t, E)
+        topv, topi = jax.lax.top_k(logits, K)
+        cw = jax.nn.softmax(topv, axis=-1)                   # (t, K)
+
+        r = jax.lax.axis_index(model_axis)
+        if mode == "ep":
+            n_local = E // tp
+            local_off = r * n_local
+        else:
+            n_local = E
+            local_off = jnp.zeros((), jnp.int32)
+
+        acc = jnp.zeros_like(xf)
+        for j in range(K):
+            outj = _dispatch_compute(
+                xf, topi[:, j], wi, wg_full, wo, n_local=n_local,
+                local_off=local_off, capacity=cap, act=act)
+            acc = acc + cw[:, j, None].astype(acc.dtype) * outj
+        acc = jax.lax.psum(acc, model_axis)
+        return acc.reshape(b, s, d)
+
+    from jax.experimental.shard_map import shard_map
+
+    fn = shard_map(
+        body_ws if weight_stationary else body, mesh=mesh,
+        in_specs=(xspec, P(None, None), wspec,
+                  (wspec if gated else P()), wospec),
+        out_specs=xspec,
+        check_rep=False,
+    )
+    wg_arg = wg if gated else jnp.zeros((), x.dtype)
+    return fn(x, params["router"], params["wi"], wg_arg, params["wo"])
+
+
+def moe_ref(params, x, *, cfg, act: str):
+    """Dense reference (no dropping, no parallelism) for tests."""
+    E, K = cfg.num_experts, cfg.top_k
+    f = act_fn(act)
+    B, S, D = x.shape
+    xf = x.reshape(-1, D)
+    logits = xf.astype(jnp.float32) @ params["router"]
+    topv, topi = jax.lax.top_k(logits, K)
+    cw = jax.nn.softmax(topv, axis=-1)
+    out = jnp.zeros_like(xf)
+    for e in range(E):
+        h = xf @ params["wi"][e].astype(xf.dtype)
+        if "wg" in params:
+            g = xf @ params["wg"][e].astype(xf.dtype)
+            h = f(g) * h
+        else:
+            h = f(h)
+        y = h @ params["wo"][e].astype(h.dtype)
+        w_e = jnp.sum(jnp.where(topi == e, cw, 0.0), axis=-1)
+        out = out + w_e[:, None].astype(out.dtype) * y
+    return out.reshape(B, S, D)

@@ -1,0 +1,79 @@
+"""Model registry: the public entry point for building any assigned arch."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, get_config
+from repro.models import decode as decode_mod
+from repro.models import transformer as tf_mod
+
+
+class Model(NamedTuple):
+    """Bundle of pure functions for one architecture."""
+
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[..., jax.Array]
+    logits: Callable[..., jax.Array]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    cache_struct: Callable[[int, int], Any]
+    init_cache: Callable[[int, int], Any]
+
+
+def build_model(cfg_or_arch, ctx=None) -> Model:
+    """Build a Model for a ModelConfig or an assigned architecture id."""
+    cfg = (cfg_or_arch if isinstance(cfg_or_arch, ModelConfig)
+           else get_config(cfg_or_arch))
+    return Model(
+        cfg=cfg,
+        init=functools.partial(tf_mod.init_params, cfg),
+        loss=functools.partial(tf_mod.loss_fn, cfg=cfg, ctx=ctx),
+        logits=functools.partial(tf_mod.logits_fn, cfg=cfg, ctx=ctx),
+        prefill=functools.partial(decode_mod.prefill, cfg=cfg, ctx=ctx),
+        decode_step=functools.partial(decode_mod.decode_step, cfg=cfg,
+                                      ctx=ctx),
+        cache_struct=functools.partial(decode_mod.cache_struct, cfg),
+        init_cache=functools.partial(decode_mod.init_cache, cfg),
+    )
+
+
+def make_inputs(cfg: ModelConfig, batch: int, seq_len: int, rng=None,
+                abstract: bool = False) -> Dict[str, Any]:
+    """Training/prefill batch: concrete (random) or abstract (SDS).
+
+    Modality frontends are STUBS per the assignment: audio/vlm receive
+    precomputed frame/patch embeddings.
+    """
+    import numpy as np
+
+    def mk(shape, dtype, hi=None):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        if rng is None:
+            r = np.random.default_rng(0)
+        else:
+            r = rng
+        if jnp.issubdtype(dtype, jnp.integer):
+            return jnp.asarray(r.integers(0, hi or cfg.vocab, shape),
+                               dtype=dtype)
+        return jnp.asarray(r.standard_normal(shape), dtype=dtype)
+
+    batch_d: Dict[str, Any] = {}
+    if cfg.embedding_inputs:
+        batch_d["embeds"] = mk((batch, seq_len, cfg.d_model),
+                               jnp.bfloat16 if cfg.dtype == "bfloat16"
+                               else jnp.float32)
+        batch_d["labels"] = mk((batch, seq_len), jnp.int32)
+    else:
+        batch_d["tokens"] = mk((batch, seq_len), jnp.int32)
+        batch_d["labels"] = mk((batch, seq_len), jnp.int32)
+    if cfg.cross_attn_every:
+        batch_d["vision_embeds"] = mk(
+            (batch, cfg.n_vision_tokens, cfg.d_model),
+            jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    return batch_d

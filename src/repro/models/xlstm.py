@@ -1,0 +1,343 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM (matrix memory, exponential gating)
+and sequential sLSTM (scalar memory, head-wise recurrence).
+
+mLSTM chunkwise form (per head, stabilised):
+  log-forget lf_t = logsigmoid(f~_t), log-input li_t = i~_t
+  b_t  = intra-chunk cumsum(lf);  a_s = li_s - b_s
+  A_t  = max(m0, cummax_{s<=t} a_s)          (running stabiliser, m0 = carry)
+  W[t,s] = exp(a_s - A_t)  (s<=t)            (intra-chunk weights)
+  inter_t = exp(m0 - A_t)                    (carried-state coefficient)
+  m_t = b_t + A_t                            (absolute stabiliser)
+  num_t = sum_s W[t,s] (q_t.k_s/sqrt(d)) v_s + inter_t (q_t @ C0_hat)
+  n_t  = sum_s W[t,s] k_s + inter_t n0_hat
+  h_t  = num_t / max(|q_t.n_t|, exp(-m_t))   (exp arg clipped at 80)
+carry:  C_hat' = sum_s exp(a_s - A_L) k_s v_s^T + exp(m0 - A_L) C_hat0
+        n_hat' = sum_s exp(a_s - A_L) k_s    + exp(m0 - A_L) n_hat0
+        m'     = b_L + A_L
+A sequential single-step rule (used for decode and as the test oracle) applies
+the same update one token at a time.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init
+
+_CLIP = 80.0
+
+
+def init_mlstm(key, d_model: int, n_heads: int, dtype) -> dict:
+    ks = jax.random.split(key, 7)
+    D = d_model
+    return {
+        "wq": dense_init(ks[0], D, D, dtype),
+        "wk": dense_init(ks[1], D, D, dtype),
+        "wv": dense_init(ks[2], D, D, dtype),
+        "wog": dense_init(ks[3], D, D, dtype),
+        "wo": dense_init(ks[4], D, D, dtype),
+        "w_ig": dense_init(ks[5], D, n_heads, jnp.float32, scale=0.01),
+        "w_fg": dense_init(ks[6], D, n_heads, jnp.float32, scale=0.01),
+        "b_fg": jnp.full((n_heads,), 3.0, jnp.float32),  # open forget gates
+        "b_ig": jnp.zeros((n_heads,), jnp.float32),
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, d, d)  stabilised matrix memory
+    n: jax.Array  # (B, H, d)
+    m: jax.Array  # (B, H)
+
+
+def mlstm_init_state(batch: int, n_heads: int, head_dim: int) -> MLSTMState:
+    return MLSTMState(
+        c=jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+        n=jnp.zeros((batch, n_heads, head_dim), jnp.float32),
+        m=jnp.full((batch, n_heads), -1e30, jnp.float32))
+
+
+def _qkv_gates(params, x, n_heads: int):
+    B, T, D = x.shape
+    hd = D // n_heads
+    q = (x @ params["wq"].astype(x.dtype)).reshape(B, T, n_heads, hd)
+    k = (x @ params["wk"].astype(x.dtype)).reshape(B, T, n_heads, hd)
+    v = (x @ params["wv"].astype(x.dtype)).reshape(B, T, n_heads, hd)
+    x32 = x.astype(jnp.float32)
+    li = x32 @ params["w_ig"] + params["b_ig"]            # (B,T,H)
+    lf = jax.nn.log_sigmoid(x32 @ params["w_fg"] + params["b_fg"])
+    og = jax.nn.sigmoid(x @ params["wog"].astype(x.dtype))  # (B,T,D)
+    return q, k, v, li, lf, og
+
+
+def mlstm_forward(params, x, *, n_heads: int, chunk: int = 128):
+    """Full-sequence chunkwise mLSTM. x: (B,T,D) -> (B,T,D)."""
+    B, T, D = x.shape
+    hd = D // n_heads
+    scale = 1.0 / np.sqrt(hd)
+    q, k, v, li, lf, og = _qkv_gates(params, x, n_heads)
+    L = min(chunk, T)
+    pad = (-T) % L
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (q, k, v))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nC = Tp // L
+
+    def to_chunks(t):  # (B, Tp, ...) -> (nC, B, L, ...)
+        return t.reshape((B, nC, L) + t.shape[2:]).swapaxes(0, 1)
+
+    xs = tuple(map(to_chunks, (q, k, v, li, lf)))
+    state = mlstm_init_state(B, n_heads, hd)
+
+    def body(carry, inp):
+        c0, n0, m0 = carry
+        qc, kc, vc, lic, lfc = inp
+        qf = qc.astype(jnp.float32) * scale
+        kf, vf = kc.astype(jnp.float32), vc.astype(jnp.float32)
+        b = jnp.cumsum(lfc, axis=1)                       # (B,L,H)
+        a = lic - b
+        A = jnp.maximum(m0[:, None], jax.lax.cummax(a, axis=1))  # (B,L,H)
+        W = jnp.exp(jnp.clip(a[:, None, :] - A[:, :, None], -_CLIP, 0.0))
+        # W: (B, t, s, H); causal mask s<=t
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        W = jnp.where(tri[None, :, :, None], W, 0.0)
+        scores = jnp.einsum("bthd,bshd->btsh", qf, kf)
+        SW = scores * W
+        num = jnp.einsum("btsh,bshd->bthd", SW, vf)
+        inter = jnp.exp(jnp.clip(m0[:, None] - A, -_CLIP, 0.0))  # (B,L,H)
+        num = num + inter[..., None] * jnp.einsum("bthd,bhde->bthe", qf, c0)
+        n_t = jnp.einsum("btsh,bshd->bthd", W, kf)
+        n_t = n_t + inter[..., None] * n0[:, None]
+        m_t = b + A
+        qn = jnp.abs(jnp.einsum("bthd,bthd->bth", qf, n_t))
+        denom = jnp.maximum(qn, jnp.exp(jnp.clip(-m_t, None, _CLIP)))
+        h = num / denom[..., None]
+        # carry update at chunk end
+        AL = A[:, -1]
+        wk_coef = jnp.exp(jnp.clip(a - AL[:, None], -_CLIP, 0.0))
+        wk_coef = wk_coef  # (B,L,H)
+        c_new = jnp.einsum("bshd,bshe,bsh->bhde", kf, vf, wk_coef)
+        i_coef = jnp.exp(jnp.clip(m0 - AL, -_CLIP, 0.0))
+        c_new = c_new + i_coef[..., None, None] * c0
+        n_new = jnp.einsum("bshd,bsh->bhd", kf, wk_coef) + i_coef[..., None] * n0
+        m_new = b[:, -1] + AL
+        return (c_new, n_new, m_new), h
+
+    _, hs = jax.lax.scan(body, tuple(state), xs)
+    h = hs.swapaxes(0, 1).reshape(B, Tp, D)[:, :T]
+    h = h.astype(x.dtype) * og
+    return h @ params["wo"].astype(x.dtype)
+
+
+def mlstm_step(params, x, state: MLSTMState, *, n_heads: int):
+    """Single-token decode. x: (B,1,D)."""
+    B, _, D = x.shape
+    hd = D // n_heads
+    scale = 1.0 / np.sqrt(hd)
+    q, k, v, li, lf, og = _qkv_gates(params, x, n_heads)
+    qf = q[:, 0].astype(jnp.float32) * scale              # (B,H,d)
+    kf, vf = k[:, 0].astype(jnp.float32), v[:, 0].astype(jnp.float32)
+    li, lf = li[:, 0], lf[:, 0]                           # (B,H)
+    m_new = jnp.maximum(lf + state.m, li)
+    i_c = jnp.exp(jnp.clip(li - m_new, -_CLIP, 0.0))
+    f_c = jnp.exp(jnp.clip(lf + state.m - m_new, -_CLIP, 0.0))
+    c = f_c[..., None, None] * state.c \
+        + i_c[..., None, None] * jnp.einsum("bhd,bhe->bhde", kf, vf)
+    n = f_c[..., None] * state.n + i_c[..., None] * kf
+    qn = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n))
+    denom = jnp.maximum(qn, jnp.exp(jnp.clip(-m_new, None, _CLIP)))
+    h = jnp.einsum("bhd,bhde->bhe", qf, c) / denom[..., None]
+    h = h.reshape(B, 1, D).astype(x.dtype) * og
+    return h @ params["wo"].astype(x.dtype), MLSTMState(c, n, m_new)
+
+
+def mlstm_ref(params, x, *, n_heads: int):
+    """Sequential oracle for tests."""
+    B, T, D = x.shape
+    state = mlstm_init_state(B, n_heads, D // n_heads)
+    ys = []
+    for t in range(T):
+        y, state = mlstm_step(params, x[:, t:t + 1], state, n_heads=n_heads)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, d_model: int, n_heads: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    hd = d_model // n_heads
+    r = (jax.random.normal(ks[1], (4, n_heads, hd, hd), jnp.float32)
+         / np.sqrt(hd))
+    return {
+        "w": dense_init(ks[0], d_model, 4 * d_model, dtype),  # i,f,z,o
+        "r": r.astype(dtype),
+        "b": jnp.concatenate([jnp.zeros((d_model,)), jnp.full((d_model,), 3.0),
+                              jnp.zeros((2 * d_model,))]).astype(jnp.float32),
+        "wo": dense_init(ks[2], d_model, d_model, dtype),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, d)
+    n: jax.Array
+    m: jax.Array  # (B, H, d)
+    h: jax.Array  # (B, H, d)
+
+
+def slstm_init_state(batch: int, n_heads: int, head_dim: int) -> SLSTMState:
+    z = jnp.zeros((batch, n_heads, head_dim), jnp.float32)
+    return SLSTMState(c=z, n=z, m=z - 1e30, h=z)
+
+
+def _slstm_cell(params, x_t, st: SLSTMState, n_heads: int):
+    """x_t: (B, D)."""
+    B, D = x_t.shape
+    hd = D // n_heads
+    wx = (x_t @ params["w"].astype(x_t.dtype)).astype(jnp.float32) \
+        + params["b"]
+    wx = wx.reshape(B, 4, n_heads, hd)
+    rh = jnp.einsum("bhd,ghde->bghe", st.h, params["r"].astype(jnp.float32))
+    it, ft, zt, ot = [wx[:, g] + rh[:, g] for g in range(4)]
+    m_new = jnp.maximum(ft + st.m, it)
+    i_c = jnp.exp(jnp.clip(it - m_new, -_CLIP, 0.0))
+    f_c = jnp.exp(jnp.clip(ft + st.m - m_new, -_CLIP, 0.0))
+    c = f_c * st.c + i_c * jnp.tanh(zt)
+    n = jnp.maximum(f_c * st.n + i_c, 1e-6)
+    h = jax.nn.sigmoid(ot) * c / n
+    return SLSTMState(c=c, n=n, m=m_new, h=h)
+
+
+def slstm_forward(params, x, *, n_heads: int):
+    """x: (B,T,D) -> (B,T,D) via sequential scan over time."""
+    B, T, D = x.shape
+    st0 = slstm_init_state(B, n_heads, D // n_heads)
+
+    def body(st, x_t):
+        st = _slstm_cell(params, x_t, st, n_heads)
+        return st, st.h
+
+    _, hs = jax.lax.scan(body, st0, x.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, T, D).astype(x.dtype)
+    return h @ params["wo"].astype(x.dtype)
+
+
+def slstm_step(params, x, st: SLSTMState, *, n_heads: int):
+    """x: (B,1,D)."""
+    B, _, D = x.shape
+    st = _slstm_cell(params, x[:, 0], st, n_heads)
+    h = st.h.reshape(B, 1, D).astype(x.dtype)
+    return h @ params["wo"].astype(x.dtype), st
+
+
+# ---------------------------------------------------------------------------
+# sLSTM with locally-accumulated recurrent-weight gradients
+# ---------------------------------------------------------------------------
+#
+# Under plain GSPMD, the backward of the time scan emits a partial-sum
+# all-reduce for dR/dW at EVERY timestep (the psum cannot hoist through the
+# while loop) — ~50k collectives per step for xlstm-1.3b train
+# (EXPERIMENTS.md §Perf). Here the whole recurrence runs inside shard_map:
+# batch rows are local, the backward scan accumulates dparams locally
+# (per-step jax.vjp of the local cell — correctness by construction), and
+# ONE psum at the end reduces across the batch shards.
+
+
+def slstm_forward_sharded(params, x, *, n_heads: int, mesh, batch_axes):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axis_names = tuple(a for a in batch_axes)
+    rwb = {"w": params["w"], "r": params["r"], "b": params["b"]}
+
+    def local(rwb_, x_loc):
+        return _slstm_scan_lg(rwb_, x_loc, n_heads, axis_names)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(), P(batch_axes, None, None)),
+                   out_specs=P(batch_axes, None, None), check_rep=False)
+    h = fn(rwb, x)
+    return h @ params["wo"].astype(x.dtype)
+
+
+def _make_cell(n_heads):
+    def cell(rwb, x_t, st_tuple):
+        st = SLSTMState(*st_tuple)
+        st2 = _slstm_cell(rwb, x_t, st, n_heads)
+        return (st2.c, st2.n, st2.m, st2.h)
+    return cell
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _slstm_scan_lg(rwb, x, n_heads, axis_names):
+    out, _ = _slstm_scan_fwd_impl(rwb, x, n_heads)
+    return out
+
+
+def _slstm_scan_fwd_impl(rwb, x, n_heads):
+    B, T, D = x.shape
+    st0 = slstm_init_state(B, n_heads, D // n_heads)
+    cell = _make_cell(n_heads)
+
+    def body(st, x_t):
+        st2 = cell(rwb, x_t, st)
+        return st2, st2
+
+    _, traj = jax.lax.scan(body, tuple(st0), x.swapaxes(0, 1))
+    h = traj[3].swapaxes(0, 1).reshape(B, T, D).astype(x.dtype)
+    return h, traj
+
+
+def _slstm_lg_fwd(rwb, x, n_heads, axis_names):
+    out, traj = _slstm_scan_fwd_impl(rwb, x, n_heads)
+    return out, (rwb, x, traj)
+
+
+def _slstm_lg_bwd(n_heads, axis_names, res, g):
+    rwb, x, traj = res
+    B, T, D = x.shape
+    st0 = tuple(slstm_init_state(B, n_heads, D // n_heads))
+    cell = _make_cell(n_heads)
+    g_h = g.reshape(B, T, n_heads, D // n_heads).astype(jnp.float32) \
+        .swapaxes(0, 1)                                   # (T, B, H, dh)
+    xs_T = x.swapaxes(0, 1)
+    # previous state per step: shift trajectory right by one
+    prev = jax.tree_util.tree_map(
+        lambda tr, s0: jnp.concatenate([s0[None], tr[:-1]], axis=0),
+        traj, st0)
+
+    d_rwb0 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), rwb)
+    dst0 = tuple(jnp.zeros((B, n_heads, D // n_heads), jnp.float32)
+                 for _ in range(4))
+
+    def body(carry, inp):
+        d_rwb, dst = carry
+        x_t, st_prev, gh_t = inp
+        _, pullback = jax.vjp(cell, rwb, x_t, st_prev)
+        dout = (dst[0], dst[1], dst[2], dst[3] + gh_t)
+        d_rwb_t, dx_t, dst_prev = pullback(dout)
+        d_rwb = jax.tree_util.tree_map(
+            lambda a, b: a + b.astype(jnp.float32), d_rwb, d_rwb_t)
+        return (d_rwb, tuple(d.astype(jnp.float32) for d in dst_prev)), dx_t
+
+    (d_rwb, _), dx_T = jax.lax.scan(body, (d_rwb0, dst0),
+                                    (xs_T, prev, g_h), reverse=True)
+    # ONE cross-shard reduction instead of one per timestep
+    d_rwb = jax.tree_util.tree_map(
+        lambda a: jax.lax.psum(a, axis_names), d_rwb)
+    d_rwb = jax.tree_util.tree_map(lambda a, p: a.astype(p.dtype),
+                                   d_rwb, rwb)
+    return d_rwb, dx_T.swapaxes(0, 1).astype(x.dtype)
+
+
+_slstm_scan_lg.defvjp(_slstm_lg_fwd, _slstm_lg_bwd)

@@ -1,0 +1,153 @@
+"""Serving engine: batched prefill + decode with the paper's batch-formation
+policy driving request aggregation.
+
+The paper's lesson (§5): the accelerator is only competitive when the
+integration layer forms large enough batches — so the server's front end IS
+the DeadlineAggregator (target batch + SLA deadline), and the MCT rule
+engine plugs in as a request-filtering stage ahead of the LM (the paper's
+Fig 14 co-location of MCT + Route Scoring on one accelerator).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.aggregator import DeadlineAggregator
+from repro.models.registry import Model, build_model
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int = 16
+    arrival: float = 0.0
+    # MCT filtering stage inputs: connection queries + actual connect times
+    mct_queries: List[Dict[str, int]] = field(default_factory=list)
+    connect_minutes: List[int] = field(default_factory=list)
+
+
+@dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray            # generated ids
+    prefill_ms: float
+    decode_ms: float
+    batch_size: int
+
+
+class LMServer:
+    """Batched prefill + decode-loop serving for any registry architecture."""
+
+    def __init__(self, cfg: ModelConfig, params=None, *, ctx=None,
+                 max_seq: int = 256, seed: int = 0,
+                 rule_filter=None):
+        self.cfg = cfg
+        self.model = build_model(cfg, ctx)
+        self.params = params if params is not None \
+            else self.model.init(jax.random.PRNGKey(seed))
+        self.max_seq = max_seq
+        self.rule_filter = rule_filter      # optional ErbiumEngine stage
+        self._decode = jax.jit(
+            lambda p, c, t, pos: self.model.decode_step(p, c, t, pos),
+            donate_argnums=(1,))
+
+    # -- core batched path ----------------------------------------------------
+    def generate_batch(self, requests: Sequence[Request]) -> List[Completion]:
+        if not requests:
+            return []
+        t0 = time.perf_counter()
+        B = len(requests)
+        plens = [len(r.tokens) for r in requests]
+        max_new = max(r.max_new_tokens for r in requests)
+        total = self.max_seq
+        assert max(plens) + max_new <= total, "max_seq too small"
+
+        cache = self.model.init_cache(B, total)
+        # prefill via the decode path, token by token up to each prompt len
+        # (keeps one compiled step; a fused prefill kernel is the fast path
+        # for attention archs and is exercised in tests via model.prefill)
+        toks = np.zeros((B, max(plens)), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, :plens[i]] = r.tokens
+        generated = [[] for _ in range(B)]
+        last_logits = None
+        for pos in range(max(plens)):
+            step_tok = jnp.asarray(toks[:, pos:pos + 1])
+            last_logits, cache = self._decode(self.params, cache, step_tok,
+                                              jnp.int32(pos))
+        t1 = time.perf_counter()
+
+        cur = np.asarray(jnp.argmax(last_logits[:, -1], axis=-1),
+                         np.int32)
+        for s in range(max_new):
+            for i in range(B):
+                if s < requests[i].max_new_tokens:
+                    generated[i].append(int(cur[i]))
+            pos = max(plens) + s
+            if pos >= total - 1 or s == max_new - 1:
+                break
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(cur[:, None]),
+                                         jnp.int32(pos))
+            cur = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        t2 = time.perf_counter()
+
+        return [Completion(rid=r.rid, tokens=np.asarray(g, np.int32),
+                           prefill_ms=(t1 - t0) * 1e3,
+                           decode_ms=(t2 - t1) * 1e3, batch_size=B)
+                for r, g in zip(requests, generated)]
+
+    # -- continuous batching front end ----------------------------------------
+    def serve_stream(self, requests: Sequence[Request], *,
+                     target_batch: int = 8, deadline: float = 0.05
+                     ) -> List[Completion]:
+        """Aggregate an arrival-ordered request stream with the paper's
+        deadline policy, then run batches."""
+        agg = DeadlineAggregator(target_batch=target_batch,
+                                 deadline=deadline)
+        by_rid = {r.rid: r for r in requests}
+        batches = []
+        for r in sorted(requests, key=lambda x: x.arrival):
+            batches.extend(agg.offer(r.rid, [{"rid": r.rid}], now=r.arrival))
+        batches.extend(agg.flush())
+        out: List[Completion] = []
+        for b in batches:
+            rs = [by_rid[uid] for uid, _ in b.ts_index]
+            if self.rule_filter is not None:
+                rs = self._filter(rs)
+            out.extend(self.generate_batch(rs))
+        return out
+
+    def _filter(self, rs: List[Request]) -> List[Request]:
+        """MCT filtering stage: batch ALL connection queries of the batch
+        into ONE rule-engine call (the paper's aggregation lesson), then drop
+        requests with an infeasible connection (connect time < MCT)."""
+        flat, owner = [], []
+        for i, r in enumerate(rs):
+            for q in r.mct_queries:
+                flat.append(q)
+                owner.append(i)
+        if not flat:
+            return list(rs)
+        dec, _, _ = self.rule_filter.match_queries(flat)
+        dec = np.asarray(dec)
+        feasible = [True] * len(rs)
+        pos = {i: 0 for i in range(len(rs))}
+        for j, i in enumerate(owner):
+            mct = int(dec[j])
+            if mct < 0:
+                mct = self.rule_filter.table.default_decision
+            have = rs[i].connect_minutes[pos[i]] \
+                if pos[i] < len(rs[i].connect_minutes) else 10 ** 6
+            pos[i] += 1
+            if have < mct:
+                feasible[i] = False
+        return [r for r, ok in zip(rs, feasible) if ok]

@@ -1,0 +1,165 @@
+"""Training loop: microbatched train step + prefetching data pipeline +
+async checkpointing + failure handling (elastic restart) + straggler policy.
+
+Single-process on this container, but every distributed hook is the real
+code path: the loop consumes per-shard data, restores onto remapped meshes,
+and commits steps through the straggler policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import store
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import Prefetcher, ShardSpec
+from repro.ft.failures import FailureInjector, StragglerPolicy
+from repro.launch.steps import build_train_step, make_ctx
+from repro.models.registry import Model, build_model
+from repro.sharding.specs import ShardCtx
+from repro.train.optimizer import AdamW
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    batch: int = 8
+    seq_len: int = 128
+    lr: float = 3e-4
+    warmup: int = 20
+    microbatches: int = 1
+    schedule_steps: Optional[int] = None  # LR schedule horizon (default steps)
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep: int = 3
+    seed: int = 0
+    log_every: int = 10
+
+
+@dataclass
+class TrainResult:
+    losses: List[float]
+    steps_done: int
+    restarts: int
+    step_times: List[float]
+
+
+def fit(cfg: ModelConfig, tc: TrainConfig, *, ctx: Optional[ShardCtx] = None,
+        injector: Optional[FailureInjector] = None,
+        log: Callable[[str], None] = print) -> TrainResult:
+    model = build_model(cfg, ctx)
+    opt = AdamW(lr=tc.lr, warmup=tc.warmup,
+                total_steps=tc.schedule_steps or tc.steps,
+                state_dtype=jnp.bfloat16
+                if cfg.optimizer_dtype == "bfloat16" else jnp.float32)
+    step_fn = build_train_step(model, ctx, opt, tc.microbatches) \
+        if ctx else _local_step(model, opt, tc.microbatches)
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    params = model.init(jax.random.PRNGKey(tc.seed))
+    opt_state = opt.init(params)
+    start = 0
+    ckpt = store.AsyncCheckpointer(tc.ckpt_dir, keep=tc.keep) \
+        if tc.ckpt_dir else None
+    if tc.ckpt_dir:
+        last = store.latest_step(tc.ckpt_dir)
+        if last is not None:
+            tree = {"params": params, "opt": opt_state}
+            restored = store.restore(tc.ckpt_dir, last, tree)
+            params, opt_state = restored["params"], restored["opt"]
+            start = last
+            log(f"[train] resumed from step {last}")
+
+    pf = Prefetcher(cfg, tc.batch, tc.seq_len, seed=tc.seed,
+                    start_step=start)
+    straggler = StragglerPolicy()
+    losses, times = [], []
+    restarts = 0
+    step = start
+    try:
+        while step < tc.steps:
+            if injector is not None and injector.check(step):
+                # simulated node failure: drop state, restore from ckpt
+                injector.schedule.pop(step, None)  # fires once
+                restarts += 1
+                log(f"[train] injected failure at step {step}; restarting")
+                if ckpt:
+                    ckpt.wait()
+                last = store.latest_step(tc.ckpt_dir) if tc.ckpt_dir else None
+                if last is None:
+                    params = model.init(jax.random.PRNGKey(tc.seed))
+                    opt_state = opt.init(params)
+                    step = 0
+                else:
+                    tree = {"params": params, "opt": opt_state}
+                    restored = store.restore(tc.ckpt_dir, last, tree)
+                    params, opt_state = restored["params"], restored["opt"]
+                    step = last
+                pf.close()
+                pf = Prefetcher(cfg, tc.batch, tc.seq_len, seed=tc.seed,
+                                start_step=step)
+                continue
+
+            t0 = time.perf_counter()
+            got_step, batch = pf.next()
+            assert got_step == step, (got_step, step)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, metrics = jitted(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            straggler.observe(dt)
+            losses.append(loss)
+            times.append(dt)
+            step += 1
+            if step % tc.log_every == 0:
+                log(f"[train] step={step} loss={loss:.4f} "
+                    f"dt={dt*1e3:.1f}ms")
+            if ckpt and step % tc.ckpt_every == 0:
+                ckpt.save(step, {"params": params, "opt": opt_state})
+        if ckpt:
+            ckpt.save(tc.steps, {"params": params, "opt": opt_state})
+            ckpt.wait()
+    finally:
+        pf.close()
+    return TrainResult(losses=losses, steps_done=step, restarts=restarts,
+                       step_times=times)
+
+
+def _local_step(model: Model, opt: AdamW, n_mb: int):
+    def step(params, opt_state, batch):
+        def loss_fn(p, mb):
+            return model.loss(p, mb)
+
+        if n_mb == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+        else:
+            mbs = jax.tree_util.tree_map(
+                lambda t: t.reshape((n_mb, t.shape[0] // n_mb)
+                                    + t.shape[1:]), batch)
+
+            def body(acc, mb):
+                g_acc, l_acc = acc
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gs, ls), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / n_mb, gs)
+            loss = ls / n_mb
+        new_p, new_s, gnorm = opt.update(grads, opt_state, params)
+        return new_p, new_s, {"loss": loss, "grad_norm": gnorm}
+
+    return step

@@ -1,0 +1,85 @@
+"""AdamW with configurable state dtype (bf16 states for the 314B/340B archs),
+global-norm clipping and cosine schedule. States inherit parameter sharding
+(FSDP => ZeRO-3 automatically under GSPMD).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    state_dtype: Any = jnp.float32
+    warmup: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+    def schedule(self, step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(self.warmup, 1), 1.0)
+        prog = jnp.clip((s - self.warmup) /
+                        jnp.maximum(self.total_steps - self.warmup, 1),
+                        0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(np.pi * prog))
+        frac = self.min_lr_frac + (1 - self.min_lr_frac) * cos
+        return self.lr * warm * frac
+
+    def init(self, params) -> AdamWState:
+        z = lambda p: jnp.zeros(p.shape, self.state_dtype)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree_util.tree_map(z, params),
+                          nu=jax.tree_util.tree_map(z, params))
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState, jax.Array]:
+        """Returns (new_params, new_state, grad_norm)."""
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                             for g in jax.tree_util.tree_leaves(g32)))
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            g32 = jax.tree_util.tree_map(lambda g: g * scale, g32)
+        step = state.step + 1
+        lr = self.schedule(step)
+        c1 = 1 - self.b1 ** step.astype(jnp.float32)
+        c2 = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            m_new = self.b1 * m32 + (1 - self.b1) * g
+            v_new = self.b2 * v32 + (1 - self.b2) * jnp.square(g)
+            mh, vh = m_new / c1, v_new / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * delta
+            return (p_new.astype(p.dtype), m_new.astype(self.state_dtype),
+                    v_new.astype(self.state_dtype))
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(g32)
+        flat_m = jax.tree_util.tree_leaves(state.mu)
+        flat_v = jax.tree_util.tree_leaves(state.nu)
+        res = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree_util.tree_unflatten(tdef, [r[0] for r in res])
+        new_m = jax.tree_util.tree_unflatten(tdef, [r[1] for r in res])
+        new_v = jax.tree_util.tree_unflatten(tdef, [r[2] for r in res])
+        return new_p, AdamWState(step=step, mu=new_m, nu=new_v), gnorm

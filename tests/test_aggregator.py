@@ -1,0 +1,69 @@
+"""Batch-formation policies (paper §5) with deterministic logical time."""
+import numpy as np
+import pytest
+
+from repro.core.aggregator import (DeadlineAggregator, batch_stats,
+                                   greedy_all, paper_policy)
+from repro.core.rules import generate_rules
+from repro.core.workload import (TravelSolution, UserQuery,
+                                 generate_workload, workload_stats)
+
+
+def _uq(uid=0, required=3, pattern=(1, 0, 2, 1, 1)):
+    sols = [TravelSolution(c, [{"q": i}] * c if c else [])
+            for i, c in enumerate(pattern)]
+    return UserQuery(uid=uid, required_ts=required, solutions=sols)
+
+
+def test_paper_policy_batches_by_required_ts():
+    uq = _uq(required=2, pattern=(1, 1, 1, 1))
+    batches = paper_policy(uq)
+    # 4 indirect TS, required=2 -> 2 batches of 2 TS each
+    assert len(batches) == 2
+    assert all(len(b.queries) == 2 for b in batches)
+
+
+def test_paper_policy_skips_direct_flights():
+    uq = _uq(required=10, pattern=(0, 0, 3))
+    batches = paper_policy(uq)
+    assert sum(len(b.queries) for b in batches) == 3
+
+
+def test_greedy_all_single_batch():
+    uq = _uq(required=2, pattern=(1, 2, 1))
+    batches = greedy_all(uq)
+    assert len(batches) == 1
+    assert len(batches[0].queries) == 4
+
+
+def test_deadline_aggregator_flush_on_target():
+    agg = DeadlineAggregator(target_batch=4, deadline=10.0)
+    out = agg.offer(0, [{"i": i} for i in range(3)], now=0.0)
+    assert out == []
+    out = agg.offer(1, [{"i": 3}, {"i": 4}], now=0.1)
+    assert len(out) == 1 and len(out[0].queries) == 4
+    assert len(agg.flush()[0].queries) == 1
+
+
+def test_deadline_aggregator_flush_on_deadline():
+    agg = DeadlineAggregator(target_batch=100, deadline=1.0)
+    agg.offer(0, [{"i": 0}], now=0.0)
+    assert agg.poll(now=0.5) == []
+    out = agg.poll(now=1.5)
+    assert len(out) == 1 and len(out[0].queries) == 1
+
+
+def test_workload_statistics_match_paper_snapshot():
+    rs = generate_rules(100, version=2, seed=0)
+    wl = generate_workload(rs, 40, seed=1)
+    st = workload_stats(wl)
+    # paper snapshot: 17% direct, 1.24 MCT queries per indirect TS
+    assert 0.10 <= st["direct_frac"] <= 0.25
+    assert 1.05 <= st["mct_per_indirect_ts"] <= 1.45
+    assert st["travel_solutions"] > 100 * 40 * 0.5 / 10
+
+
+def test_batch_stats():
+    uq = _uq(required=2, pattern=(1, 1, 1, 1))
+    st = batch_stats(paper_policy(uq))
+    assert st["n_batches"] == 2 and st["mean"] == 2.0

@@ -1,0 +1,73 @@
+"""Checkpoint store: roundtrip, atomic LATEST, gc, async, resharding hook."""
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import store
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.standard_normal((4, 8)), jnp.float32),
+            "b": {"c": jnp.asarray(rng.integers(0, 9, (3,)), jnp.int32),
+                  "d": [jnp.ones((2, 2), jnp.bfloat16),
+                        jnp.zeros((5,), jnp.float32)]}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    store.save(tmp_path, 7, t)
+    assert store.latest_step(tmp_path) == 7
+    restored = store.restore(tmp_path, 7, jax.eval_shape(lambda: t))
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32)
+                                      if a.dtype == jnp.bfloat16
+                                      else np.asarray(a),
+                                      np.asarray(b, np.float32)
+                                      if b.dtype == jnp.bfloat16
+                                      else np.asarray(b))
+
+
+def test_gc_keeps_last_k(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        store.save(tmp_path, s, t, keep=2)
+    steps = sorted(int(p.name.split("_")[1])
+                   for p in tmp_path.glob("step_*"))
+    assert steps == [4, 5]
+
+
+def test_latest_pointer_ignores_missing_dir(tmp_path):
+    t = _tree()
+    store.save(tmp_path, 3, t)
+    (tmp_path / "LATEST").write_text("99")
+    assert store.latest_step(tmp_path) is None
+
+
+def test_shape_mismatch_raises(tmp_path):
+    store.save(tmp_path, 1, {"a": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        store.restore(tmp_path, 1,
+                      {"a": jax.ShapeDtypeStruct((3, 3), jnp.float32)})
+
+
+def test_async_checkpointer(tmp_path):
+    ck = store.AsyncCheckpointer(tmp_path, keep=2)
+    t = _tree()
+    ck.save(10, t)
+    ck.wait()
+    assert store.latest_step(tmp_path) == 10
+    ck.save(20, t)
+    ck.save(30, t)   # waits for 20 first
+    ck.wait()
+    assert store.latest_step(tmp_path) == 30
+    assert 10 not in [int(p.name.split("_")[1])
+                      for p in tmp_path.glob("step_*")]

@@ -1,0 +1,93 @@
+"""Offline compiler: v1/v2 lowering, dictionaries, overlap elimination,
+partition tables."""
+import numpy as np
+import pytest
+
+from repro.core.compiler import INT_MAX, compile_rules
+from repro.core.encoder import encode_queries
+from repro.core.rules import (WILDCARD, Rule, RuleSet, generate_queries,
+                              generate_rules, schema_v2)
+from repro.kernels.ref import rule_match_ref
+
+import jax.numpy as jnp
+
+
+def test_v1_v2_column_counts():
+    t1 = compile_rules(generate_rules(50, version=1, seed=0))
+    t2 = compile_rules(generate_rules(50, version=2, seed=0))
+    assert t1.n_cols == 22                      # ranges native
+    assert t2.n_cols == 31                      # 21 cat + 5 ranges x 2
+    assert t2.n_cols > t1.n_cols                # "bigger NFA" in v2
+
+
+def test_wildcards_become_full_intervals():
+    rs = generate_rules(50, version=1, seed=0)
+    t = compile_rules(rs)
+    # at least one wildcard entry spans the full interval
+    assert (t.mins == 0).any() and (t.maxs == INT_MAX).any()
+
+
+def _mk_ruleset(rules):
+    return RuleSet(schema=schema_v2(), rules=rules, version=2)
+
+
+def test_overlap_elimination_unique_match():
+    """Two overlapping flight-number ranges (same other criteria) must be
+    split so any flight number matches exactly one compiled rule."""
+    base = {"airport": 1}
+    r0 = Rule(values={**base, "arr_flightno": (100, 500)}, decision=30,
+              rule_id=0)
+    r1 = Rule(values={**base, "arr_flightno": (300, 800)}, decision=60,
+              rule_id=1)
+    t = compile_rules(_mk_ruleset([r0, r1]))
+    cols = {c.name: j for j, c in enumerate(t.columns)}
+    lo, hi = cols["arr_flightno.lo"], cols["arr_flightno.hi"]
+    # compiled ranges must be pairwise disjoint
+    ivs = sorted((t.mins[i, lo], t.maxs[i, hi]) for i in range(t.n_rules))
+    for (a1, b1), (a2, b2) in zip(ivs, ivs[1:]):
+        assert b1 < a2, f"overlap: {(a1, b1)} vs {(a2, b2)}"
+    # narrow (more precise) rule wins in the overlap region
+    winners = {}
+    for fn in (150, 400, 700):
+        cover = [i for i in range(t.n_rules)
+                 if t.mins[i, lo] <= fn <= t.maxs[i, hi]]
+        assert len(cover) == 1, f"flight {fn} covered by {cover}"
+        winners[fn] = t.decisions[cover[0]]
+    assert winners[150] == 30 and winners[700] == 60
+    # overlap region goes to the more precise (narrower) source rule
+    assert winners[400] == 30
+
+
+def test_overlap_count_is_moderate():
+    """Paper: zero to a few hundred extra rules among 160k (scaled here)."""
+    rs = generate_rules(4_000, version=2, seed=5)
+    t = compile_rules(rs)
+    extra = t.n_rules - len(rs.rules)
+    assert 0 <= extra <= len(rs.rules) * 0.05
+
+
+def test_partition_table_covers_all_rules():
+    rs = generate_rules(500, version=2, seed=1)
+    t = compile_rules(rs)
+    assert t.part_order.shape[0] == t.n_rules
+    assert sorted(t.part_order.tolist()) == list(range(t.n_rules))
+    # offsets monotone
+    assert (np.diff(t.part_offsets) >= 0).all()
+    assert t.part_offsets[-1] + len(t.wildcard_rows) == t.n_rules
+
+
+def test_oov_query_values_only_match_wildcards():
+    r0 = Rule(values={"airport": 1, "arr_terminal": 2}, decision=25)
+    r1 = Rule(values={"airport": 1, "arr_terminal": WILDCARD}, decision=60)
+    t = compile_rules(_mk_ruleset([r0, r1]))
+    qs = generate_queries(_mk_ruleset([r0, r1]), 1, seed=0, match_bias=0.0)
+    q = dict(qs[0])
+    q["airport"] = 1
+    q["arr_terminal"] = 999_999      # unseen raw value
+    enc = encode_queries(t, [q])
+    w, idx = rule_match_ref(jnp.asarray(enc), jnp.asarray(t.mins),
+                            jnp.asarray(t.maxs), jnp.asarray(t.weights))
+    matched = [i for i in [int(idx[0])] if i >= 0]
+    for i in matched:
+        assert t.maxs[i, [j for j, c in enumerate(t.columns)
+                          if c.name == "arr_terminal"][0]] == INT_MAX

@@ -1,0 +1,50 @@
+"""Cost model reproduces the paper's Tables 2-3 totals; TPU balance math."""
+import pytest
+
+from repro.core.cost_model import (PAPER_TABLE2_TOTALS, TPUCostParams,
+                                   table2, table3, tpu_balance)
+
+
+def test_table2_reproduces_paper_totals():
+    for d in table2():
+        expected = PAPER_TABLE2_TOTALS[d.name]
+        assert d.total_usd == pytest.approx(expected, rel=0.03), d.name
+
+
+def test_table2_cloud_ratios():
+    rows = {d.name: d for d in table2()}
+    aws = rows["AWS / DE + ERBIUM"].total_usd / \
+        rows["AWS / Original Domain Explorer"].total_usd
+    az = rows["Azure / DE + ERBIUM"].total_usd / \
+        rows["Azure / Original Domain Explorer"].total_usd
+    # paper: "3x for AWS, and 2.5x for Azure"
+    assert 2.8 <= aws <= 3.4
+    assert 2.3 <= az <= 2.8
+
+
+def test_table3_onprem_u50_is_cheapest():
+    rows = {d.name: d.total_usd for d in table3()}
+    assert rows["On-Premises / DE + ERBIUM + RS (U50)"] < \
+        rows["On-Premises / Original DE + Route Scoring"]
+    assert rows["On-Premises / DE + ERBIUM + RS (U50)"] < \
+        rows["On-Premises / DE + ERBIUM + RS (U200)"]
+
+
+def test_tpu_balance_imbalance_phenomenon():
+    p = TPUCostParams()
+    r = tpu_balance(p, target_qps=2e9)
+    # host feeding dominates: accelerator under-utilised
+    assert r["vcpus_needed"] / (p.host_vcpus_per_8chips / 8) \
+        > r["chips_needed"]
+    assert r["accel_utilisation"] < 0.2
+    # better host:chip ratio fixes it
+    p2 = TPUCostParams(host_qps_per_vcpu=2_500_000.0)
+    r2 = tpu_balance(p2, target_qps=2e9)
+    assert r2["accel_utilisation"] > r["accel_utilisation"] * 5
+
+
+def test_tpu_balance_monotone_in_load():
+    p = TPUCostParams()
+    costs = [tpu_balance(p, q)["accel_cost_usd_year"]
+             for q in (1e8, 1e9, 1e10)]
+    assert costs[0] < costs[1] < costs[2]

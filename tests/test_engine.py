@@ -1,0 +1,66 @@
+"""ErbiumEngine: backend agreement, partitioned pruning, CPU baselines,
+hot rule reload."""
+import numpy as np
+import pytest
+
+from repro.core.compiler import compile_rules
+from repro.core.encoder import encode_queries
+from repro.core.engine import (ErbiumEngine, cpu_match_numpy,
+                               cpu_match_python)
+from repro.core.rules import generate_queries, generate_rules
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rs = generate_rules(600, version=2, seed=11)
+    t = compile_rules(rs)
+    qs = generate_queries(rs, 256, seed=12)
+    enc = encode_queries(t, qs)
+    return rs, t, enc
+
+
+def test_backends_agree(setup):
+    rs, t, enc = setup
+    pallas = ErbiumEngine(t, tile_b=64, tile_r=128)
+    ref = ErbiumEngine(t, backend="ref")
+    part = ErbiumEngine(t, tile_r=128, partitioned=True)
+    d1, w1, _ = pallas.match(enc)
+    d2, w2, _ = ref.match(enc)
+    d3, w3, _ = part.match(enc)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d3))
+    np.testing.assert_array_equal(np.asarray(w1), np.asarray(w3))
+
+
+def test_cpu_baselines_agree(setup):
+    rs, t, enc = setup
+    d_np, w_np, _ = cpu_match_numpy(t, enc)
+    d_py, w_py, _ = cpu_match_python(t, enc, limit=40)
+    np.testing.assert_array_equal(d_np[:40], d_py[:40])
+    np.testing.assert_array_equal(w_np[:40], w_py[:40])
+    eng = ErbiumEngine(t, backend="ref")
+    d_e, w_e, _ = eng.match(enc)
+    np.testing.assert_array_equal(np.asarray(d_e), d_np)
+
+
+def test_hot_reload_changes_rules(setup):
+    rs, t, enc = setup
+    eng = ErbiumEngine(t, tile_r=128)
+    d1, _, _ = eng.match(enc)
+    rs2 = generate_rules(600, version=2, seed=99)
+    us = eng.reload(rs2)
+    assert us > 0 and eng.reload_us == us
+    qs2 = generate_queries(rs2, 256, seed=12)
+    enc2 = eng.encode(
+        __import__("repro.core.encoder", fromlist=["queries_to_arrays"]
+                   ).queries_to_arrays(qs2))
+    d2, _, _ = eng.match(enc2)
+    assert d2.shape == d1.shape
+
+
+def test_match_rate_with_bias(setup):
+    rs, t, enc = setup
+    eng = ErbiumEngine(t, backend="ref")
+    d, w, rid = eng.match(enc)
+    assert float(np.mean(np.asarray(w) >= 0)) > 0.5

@@ -1,0 +1,65 @@
+"""Fault tolerance: heartbeats, elastic remesh planning, straggler policy,
+and an injected-failure restart through the train loop."""
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.ft.failures import (ElasticPlan, FailureInjector,
+                               HeartbeatMonitor, StragglerPolicy,
+                               plan_elastic_mesh)
+from repro.ft.failures import HeartbeatMonitor
+from repro.train.loop import TrainConfig, fit
+
+
+def test_heartbeat_detection():
+    hb = HeartbeatMonitor(timeout=5.0)
+    hb.beat("h0", now=0.0)
+    hb.beat("h1", now=0.0)
+    hb.beat("h0", now=4.0)
+    assert hb.failed(now=6.0) == ["h1"]
+    assert hb.alive(now=6.0) == ["h0"]
+
+
+def test_elastic_plan_preserves_model_parallelism():
+    # 256 chips (16x16), lose 16 -> 240 survivors -> data=15
+    p = plan_elastic_mesh(240, model_parallel=16, global_batch=256,
+                          orig_data=16)
+    assert p.model == 16 and p.data == 15
+    assert p.n_devices == 240
+    assert p.global_batch == 240  # 16 per replica x 15
+    # atomic TP groups: 250 survivors still yield data=15
+    p2 = plan_elastic_mesh(250, model_parallel=16, global_batch=256,
+                           orig_data=16)
+    assert p2.data == 15 and p2.dropped_devices == 10
+
+
+def test_elastic_plan_raises_below_minimum():
+    with pytest.raises(ValueError):
+        plan_elastic_mesh(8, model_parallel=16, global_batch=64)
+
+
+def test_straggler_policy_drops_and_rescales():
+    sp = StragglerPolicy(tolerance=2.0)
+    sp.observe(1.0)
+    kept, scale = sp.commit([1.0, 1.1, 5.0, 0.9])
+    assert 2 not in kept and len(kept) == 3
+    assert scale == pytest.approx(4 / 3)
+
+
+def test_straggler_all_late_keeps_fastest():
+    sp = StragglerPolicy(tolerance=1.5)
+    sp.observe(1.0)
+    kept, scale = sp.commit([9.0, 5.0, 7.0])
+    assert kept == [1]
+    assert scale == 3.0
+
+
+def test_injected_failure_restart(tmp_path):
+    cfg = get_config("llama3.2-3b").reduced()
+    tc = TrainConfig(steps=8, batch=4, seq_len=16, ckpt_dir=str(tmp_path),
+                     ckpt_every=3, log_every=100, lr=1e-3)
+    inj = FailureInjector(schedule={5: "host3"})
+    res = fit(cfg, tc, injector=inj, log=lambda s: None)
+    assert res.restarts == 1
+    assert res.steps_done == 8
+    assert all(np.isfinite(res.losses))

@@ -1,0 +1,114 @@
+"""Pallas rule-match kernel vs pure-jnp oracle: shape/dtype sweeps +
+hypothesis property tests (interpret mode executes the kernel body on CPU).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import _pad_to, device_table, match_rules
+from repro.kernels.ref import rule_match_ref
+from repro.kernels.rule_match import rule_match_pallas
+
+
+def _random_tables(rng, B, R, C, weight_max=100):
+    q = rng.integers(0, 50, (B, C)).astype(np.int32)
+    mins = rng.integers(0, 50, (R, C)).astype(np.int32)
+    widths = rng.integers(0, 30, (R, C)).astype(np.int32)
+    maxs = mins + widths
+    wild = rng.random((R, C)) < 0.5
+    mins = np.where(wild, 0, mins).astype(np.int32)
+    maxs = np.where(wild, np.iinfo(np.int32).max - 1, maxs).astype(np.int32)
+    w = rng.integers(0, weight_max, (R,)).astype(np.int32)
+    return q, mins, maxs, w
+
+
+@pytest.mark.parametrize("B,R,C,tb,tr", [
+    (64, 128, 8, 64, 128),
+    (128, 256, 26, 64, 128),
+    (256, 512, 31, 256, 512),
+    (32, 512, 3, 32, 256),
+    (512, 128, 13, 128, 128),
+])
+def test_kernel_matches_ref_shapes(B, R, C, tb, tr):
+    rng = np.random.default_rng(B + R + C)
+    q, mins, maxs, w = _random_tables(rng, B, R, C)
+    bw, bi = rule_match_pallas(jnp.asarray(q.T), jnp.asarray(mins.T),
+                               jnp.asarray(maxs.T), jnp.asarray(w[None]),
+                               tile_b=tb, tile_r=tr, interpret=True)
+    rw, ri = rule_match_ref(jnp.asarray(q), jnp.asarray(mins),
+                            jnp.asarray(maxs), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(bw[0]), np.asarray(rw))
+    np.testing.assert_array_equal(np.asarray(bi[0]), np.asarray(ri))
+
+
+def test_tie_break_lowest_rule_index():
+    # two identical rules with equal weight: index 0 must win, in-tile and
+    # across tiles
+    C = 4
+    q = np.zeros((8, C), np.int32)
+    mins = np.zeros((256, C), np.int32)
+    maxs = np.full((256, C), 10, np.int32)
+    w = np.full((256,), 7, np.int32)
+    bw, bi = rule_match_pallas(jnp.asarray(q.T), jnp.asarray(mins.T),
+                               jnp.asarray(maxs.T), jnp.asarray(w[None]),
+                               tile_b=8, tile_r=64, interpret=True)
+    assert (np.asarray(bi[0]) == 0).all()
+    assert (np.asarray(bw[0]) == 7).all()
+
+
+def test_no_match_returns_minus_one():
+    C = 3
+    q = np.full((16, C), 100, np.int32)
+    mins = np.zeros((64, C), np.int32)
+    maxs = np.full((64, C), 5, np.int32)
+    w = np.full((64,), 3, np.int32)
+    bw, bi = rule_match_pallas(jnp.asarray(q.T), jnp.asarray(mins.T),
+                               jnp.asarray(maxs.T), jnp.asarray(w[None]),
+                               tile_b=16, tile_r=64, interpret=True)
+    assert (np.asarray(bw[0]) == -1).all()
+    assert (np.asarray(bi[0]) == -1).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 97), st.integers(1, 130), st.integers(1, 12),
+       st.integers(0, 2**31 - 1))
+def test_property_match_semantics(B, R, C, seed):
+    """For random tables, the op (with padding) equals brute force numpy."""
+    rng = np.random.default_rng(seed)
+    q, mins, maxs, w = _random_tables(rng, B, R, C)
+    from repro.core.compiler import CompiledRuleTable  # noqa: F401
+    ok = (q[:, None, :] >= mins[None]) & (q[:, None, :] <= maxs[None])
+    matched = ok.all(-1)
+    score = np.where(matched, w[None, :], -1)
+    exp_w = score.max(1)
+    exp_i = np.where(exp_w >= 0, score.argmax(1), -1)
+
+    qp = _pad_to(jnp.asarray(q.T), 32, 1, 0)
+    mp = _pad_to(jnp.asarray(mins.T), 64, 1, 1)
+    xp = _pad_to(jnp.asarray(maxs.T), 64, 1, 0)
+    wp = _pad_to(jnp.asarray(w[None]), 64, 1, -1)
+    bw, bi = rule_match_pallas(qp, mp, xp, wp, tile_b=32, tile_r=64,
+                               interpret=True)
+    np.testing.assert_array_equal(np.asarray(bw[0])[:B], exp_w)
+    np.testing.assert_array_equal(np.asarray(bi[0])[:B], exp_i)
+
+
+@pytest.mark.parametrize("n_engines", [1, 2, 4])
+def test_engine_lanes_equivalent(n_engines):
+    from repro.core.compiler import compile_rules
+    from repro.core.rules import generate_queries, generate_rules
+    from repro.core.encoder import encode_queries
+
+    rs = generate_rules(200, version=1, seed=9)
+    t = compile_rules(rs)
+    qs = generate_queries(rs, 128, seed=4)
+    enc = jnp.asarray(encode_queries(t, qs))
+    dt = device_table(t, tile_r=128)
+    d1, w1, r1 = match_rules(enc, dt, tile_b=32, tile_r=128, n_engines=1)
+    dn, wn, rn = match_rules(enc, dt, tile_b=32, tile_r=128,
+                             n_engines=n_engines)
+    np.testing.assert_array_equal(np.asarray(w1), np.asarray(wn))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(dn))

@@ -1,0 +1,95 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, shape + finiteness asserts; decode consistency; full-config parameter
+counts near the nominal sizes."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ASSIGNED_ARCHS, get_config
+from repro.models.registry import build_model, make_inputs
+from repro.train.optimizer import AdamW
+
+NOMINAL = {
+    "grok-1-314b": 314e9, "qwen3-moe-235b-a22b": 235e9,
+    "xlstm-1.3b": 1.3e9, "llama-3.2-vision-11b": 11e9,
+    "hubert-xlarge": 1.0e9, "llama3.2-3b": 3.2e9,
+    "internlm2-20b": 20e9, "gemma3-1b": 1.0e9,
+    "nemotron-4-340b": 340e9, "hymba-1.5b": 1.5e9,
+}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 32
+    batch = make_inputs(cfg, B, S, rng=np.random.default_rng(0))
+    logits = model.logits(params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    opt = AdamW(lr=1e-3, warmup=1, total_steps=10)
+    ostate = opt.init(params)
+
+    def loss_fn(p):
+        return model.loss(p, batch)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    new_p, new_s, gnorm = opt.update(g32, ostate, params)
+    assert bool(jnp.isfinite(gnorm))
+    loss2 = model.loss(new_p, batch)
+    assert bool(jnp.isfinite(loss2))
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "gemma3-1b", "hymba-1.5b"])
+def test_smoke_decode_consistency(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    batch = make_inputs(cfg, B, S, rng=np.random.default_rng(1))
+    full = model.logits(params, batch).astype(jnp.float32)
+    cache = model.init_cache(B, S)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(S):
+        lg, cache = step(params, cache, batch["tokens"][:, t:t + 1],
+                         jnp.int32(t))
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_full_config_param_counts(arch):
+    cfg = get_config(arch)
+    n = cfg.n_params()
+    nominal = NOMINAL[arch]
+    assert 0.7 * nominal <= n <= 1.35 * nominal, \
+        f"{arch}: {n/1e9:.1f}B vs nominal {nominal/1e9:.0f}B"
+    assert cfg.n_active_params() <= n
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    a = cfg.n_active_params()
+    assert 15e9 <= a <= 30e9, f"active {a/1e9:.1f}B vs nominal 22B"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_shape_cell_assignment(arch):
+    cfg = get_config(arch)
+    cells = {c.name for c in cfg.shape_cells()}
+    assert "train_4k" in cells and "prefill_32k" in cells
+    if cfg.encoder_only:
+        assert "decode_32k" not in cells
+    if not cfg.supports_long_context:
+        assert "long_500k" not in cells
+    skips = dict(cfg.skipped_cells())
+    assert cells.isdisjoint(skips)

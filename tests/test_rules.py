@@ -1,0 +1,54 @@
+"""Rule model: schema counts, weights, generator statistics."""
+import numpy as np
+
+from repro.core.rules import (WILDCARD, Rule, generate_queries,
+                              generate_rules, schema_v1, schema_v2)
+
+
+def test_schema_criteria_counts():
+    # paper: 22 consolidated criteria in v1, 26 in v2
+    assert len(schema_v1()) == 22
+    assert len(schema_v2()) == 26
+
+
+def test_v2_cross_fields_present():
+    s2 = {c.name: c for c in schema_v2()}
+    for side in ("arr", "dep"):
+        assert s2[f"{side}_op_carrier"].cross_fields is not None
+        assert s2[f"{side}_cs_flightno"].cross_fields is not None
+
+
+def test_rule_weight_monotone_in_bound_criteria():
+    schema = schema_v1()
+    r_generic = Rule(values={"airport": 5}, decision=30)
+    r_precise = Rule(values={"airport": 5, "arr_terminal": 1}, decision=30)
+    assert r_precise.weight(schema) > r_generic.weight(schema)
+
+
+def test_v2_range_weight_penalises_wide_ranges():
+    schema = schema_v2()
+    narrow = Rule(values={"airport": 1, "arr_flightno": (100, 110)},
+                  decision=30)
+    wide = Rule(values={"airport": 1, "arr_flightno": (100, 5000)},
+                decision=30)
+    assert narrow.weight(schema, 2) > wide.weight(schema, 2)
+    # v1 has no dynamic penalty
+    assert narrow.weight(schema, 1) == wide.weight(schema, 1)
+
+
+def test_generator_scales_and_skew():
+    rs = generate_rules(2_000, version=2, seed=1)
+    assert len(rs.rules) == 2_000
+    airports = [r.values["airport"] for r in rs.rules]
+    # Zipf skew: the most common airport appears far more than median
+    counts = np.bincount(airports)
+    assert counts.max() > 20 * max(np.median(counts[counts > 0]), 1)
+
+
+def test_queries_have_all_fields():
+    rs = generate_rules(100, version=2, seed=2)
+    qs = generate_queries(rs, 50, seed=3)
+    keys = set(qs[0])
+    for q in qs:
+        assert set(q) == keys
+    assert "arr_cs" in keys and "dep_cs" in keys

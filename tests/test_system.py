@@ -1,0 +1,79 @@
+"""End-to-end behaviour tests: the full paper pipeline (rules -> compiler ->
+engine -> workload -> aggregator -> wrapper) and the deployment analyzer."""
+import numpy as np
+import pytest
+
+from repro.core.aggregator import Batch, batch_stats, greedy_all, paper_policy
+from repro.core.compiler import compile_rules
+from repro.core.deployment import Config, evaluate, pareto, sweep
+from repro.core.encoder import encode_queries
+from repro.core.engine import ErbiumEngine, cpu_match_numpy
+from repro.core.rules import generate_queries, generate_rules
+from repro.core.workload import generate_workload, workload_stats
+from repro.core.wrapper import MCTWrapper, StageTimes, measure_stage_times
+
+
+@pytest.fixture(scope="module")
+def system():
+    rs = generate_rules(800, version=2, seed=21)
+    table = compile_rules(rs)
+    eng = ErbiumEngine(table, tile_b=64, tile_r=256)
+    wl = generate_workload(rs, 6, seed=2, mean_ts=60.0)
+    return rs, table, eng, wl
+
+
+def test_end_to_end_mct_flow(system):
+    rs, table, eng, wl = system
+    wrap = MCTWrapper([eng], n_workers=2)
+    wrap.start()
+    n = 0
+    for uq in wl:
+        for b in paper_policy(uq):
+            wrap.submit(b)
+            n += 1
+    results = wrap.drain(n)
+    wrap.stop()
+    assert len(results) == n
+    total_q = sum(len(r.decisions) for r in results)
+    assert total_q == sum(len(b.queries) for uq in wl
+                          for b in paper_policy(uq))
+    # decisions agree with the CPU oracle on one batch
+    b0 = paper_policy(wl[0])[0]
+    enc = encode_queries(table, b0.queries)
+    d_cpu, _, _ = cpu_match_numpy(table, enc)
+    r0 = [r for r in results if r.uid == wl[0].uid][0]
+    np.testing.assert_array_equal(r0.decisions[:len(d_cpu)], d_cpu)
+
+
+def test_stage_measurement_and_deployment_model(system):
+    rs, table, eng, wl = system
+    qs = generate_queries(rs, 512, seed=9)
+
+    def make_batch(n):
+        return Batch(0, [qs[i % len(qs)] for i in range(n)], [(0, -1)] * n)
+
+    times = measure_stage_times(eng, make_batch, [64, 256, 1024], repeats=2)
+    assert all(t.kernel_us > 0 and t.encode_us > 0 for t in times)
+    # larger batches cost more in encode (linear-ish)
+    assert times[-1].encode_us > times[0].encode_us
+
+    cfgs = [Config(p, w, k, e) for p, w, k, e in
+            [(1, 1, 1, 1), (1, 1, 1, 4), (4, 4, 1, 4), (4, 4, 4, 1)]]
+    perfs = sweep(cfgs, times, [256, 1024])
+    assert all(p.throughput_qps > 0 for p in perfs)
+    # more engines reduce single-request latency (Fig 7b)
+    lat1 = [p for p in perfs if p.config == cfgs[0] and p.batch == 1024][0]
+    lat4 = [p for p in perfs if p.config == cfgs[1] and p.batch == 1024][0]
+    assert lat4.latency_us < lat1.latency_us
+    front = pareto(perfs)
+    assert len(front) >= 1
+    for a, b in zip(front, front[1:]):
+        assert b.latency_us < a.latency_us
+
+
+def test_aggregation_improves_batch_sizes(system):
+    rs, table, eng, wl = system
+    st_paper = batch_stats([b for uq in wl for b in paper_policy(uq)])
+    st_greedy = batch_stats([b for uq in wl for b in greedy_all(uq)])
+    assert st_greedy["mean"] >= st_paper["mean"]
+    assert st_greedy["n_batches"] <= st_paper["n_batches"]
