@@ -38,5 +38,16 @@ def time_us(fn, *args, repeats: int = 3, warmup: int = 1, **kw) -> float:
     return float(np.median(ts))
 
 
-def emit(name: str, us_per_call: float, derived: str):
+# structured copies of every emitted row, for ``run.py --json`` trajectory
+# files (BENCH_endtoend.json); ``extra`` carries suite-specific payloads
+# such as the fig13 latency breakdown
+RESULTS: list = []
+
+
+def emit(name: str, us_per_call: float, derived: str, **extra):
     print(f"{name},{us_per_call:.1f},{derived}")
+    row = {"name": name, "us_per_call": float(us_per_call),
+           "derived": derived}
+    if extra:
+        row.update(extra)
+    RESULTS.append(row)

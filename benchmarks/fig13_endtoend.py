@@ -1,0 +1,93 @@
+"""End-to-end saturation/imbalance sweep (the paper's §5–6 phenomenon as a
+single harness, extending Figs 7–12 from microbenchmarks to the full
+submission pipeline).
+
+Protocol: measure the server's full-batch service rate once, then sweep
+open-loop offered load at fractions of that capacity through the
+AsyncScheduler. At low offered load the deadline flushes small batches, so
+per-request device cost is high and the system saturates well below the
+nominal full-batch capacity — the paper's "the host cannot generate enough
+load to realise the accelerator's throughput" regime. As offered load
+rises, batches fill and achieved throughput climbs toward capacity until
+queueing dominates latency and backpressure starts rejecting. Dialing up
+``SyntheticWorkload`` host work per request (prompt length, MCT queries)
+shifts the bottleneck host-side and the device-idle-fraction climbs.
+
+Emits one CSV row per offered-load point; with ``run.py --json`` the full
+latency breakdown + idle fraction lands in BENCH_endtoend.json.
+"""
+import time
+
+from benchmarks.common import emit
+
+# sweep grid: offered load as a multiple of measured capacity
+LOAD_FRACTIONS = (0.25, 0.5, 1.0, 2.0, 4.0)
+TARGET_BATCH = 8
+MAX_QUEUE = 16
+# must exceed queue depth PLUS pipeline capacity (pipeline_depth+1 batches
+# in flight), or the overload points can never fill the admission queue
+# and the rejection regime is structurally unreachable
+N_PER_POINT = 64
+
+
+def _server():
+    from repro.configs.base import get_config
+    from repro.serve import LMServer
+    cfg = get_config("llama3.2-3b").reduced()
+    return LMServer(cfg, max_seq=48)
+
+
+def _capacity_qps(server, workload) -> float:
+    """Service rate with full target-sized batches (requests/second)."""
+    server.warmup((1, 2, 4, TARGET_BATCH))   # pre-compile bucket sizes
+    reqs = workload.build(TARGET_BATCH, rid_base=10_000)
+    t0 = time.perf_counter()
+    server.generate_batch(reqs)
+    dt = time.perf_counter() - t0
+    return TARGET_BATCH / dt
+
+
+def run():
+    from repro.serve import AsyncScheduler, OpenLoopGen, SyntheticWorkload
+
+    server = _server()
+    workload = SyntheticWorkload(vocab=server.cfg.vocab, prompt_len=6,
+                                 max_new_tokens=3, seed=1)
+    cap = _capacity_qps(server, workload)
+
+    for frac in LOAD_FRACTIONS:
+        qps = cap * frac
+        sched = AsyncScheduler(server, target_batch=TARGET_BATCH,
+                               deadline=0.01, max_queue=MAX_QUEUE,
+                               policy="reject")
+        gen = OpenLoopGen(workload, qps=qps, n=N_PER_POINT,
+                          seed=int(frac * 100))
+        gen.drive(sched)
+        sched.result()
+        rep = sched.report(offered_qps=qps)
+        t = rep.breakdown["total"]
+        emit(f"fig13_load_{frac:g}x",
+             t.p50_ms * 1e3,
+             f"offered={qps:.0f}qps achieved={rep.achieved_qps:.0f}qps "
+             f"idle={rep.device_idle_fraction:.2f} "
+             f"rej={rep.n_rejected} p99={t.p99_ms:.0f}ms",
+             report=rep.as_dict())
+
+    # baseline vs pipelined on the identical stream: the host/device
+    # overlap win of the async pipeline (fig13 inset)
+    reqs = OpenLoopGen(workload, qps=cap, n=24, seed=5).requests()
+    t0 = time.perf_counter()
+    server.serve_stream(reqs, target_batch=TARGET_BATCH, deadline=0.01)
+    sync_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    server.serve_stream(reqs, target_batch=TARGET_BATCH, deadline=0.01,
+                        pipeline=True)
+    pipe_s = time.perf_counter() - t0
+    emit("fig13_pipeline_overlap", pipe_s * 1e6,
+         f"sync={sync_s * 1e3:.0f}ms pipelined={pipe_s * 1e3:.0f}ms "
+         f"speedup={sync_s / pipe_s:.2f}x",
+         sync_s=sync_s, pipelined_s=pipe_s)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""ASYNC SUBMISSION PIPELINE DEMO — the paper's §5–6 imbalance, live.
+
+Sweeps open-loop offered load through the AsyncScheduler and prints the
+saturation/imbalance curve: below capacity the device idles (the host
+can't form big batches fast enough); past capacity achieved throughput
+flattens, queue wait dominates latency, and backpressure rejects.
+
+Also contrasts the synchronous baseline with the double-buffered pipeline
+on the same request stream, and a closed-loop run that always fills
+target-sized batches.
+
+Run:  PYTHONPATH=src python examples/async_serving.py
+"""
+import time
+
+from repro.configs.base import get_config
+from repro.serve import (AsyncScheduler, ClosedLoopGen, LMServer,
+                         OpenLoopGen, SyntheticWorkload)
+
+
+def main():
+    cfg = get_config("llama3.2-3b").reduced()
+    server = LMServer(cfg, max_seq=48)
+    workload = SyntheticWorkload(vocab=cfg.vocab, prompt_len=6,
+                                 max_new_tokens=3, seed=1)
+
+    # capacity: service rate with full batches (pre-compile bucket sizes)
+    server.warmup((1, 2, 4, 8))
+    warm = workload.build(8, rid_base=10_000)
+    t0 = time.perf_counter()
+    server.generate_batch(warm)
+    cap = 8 / (time.perf_counter() - t0)
+    print(f"measured capacity ~{cap:.0f} q/s at batch 8\n")
+
+    print("open-loop sweep (offered load vs achieved / idle / latency):")
+    for frac in (0.25, 0.5, 1.0, 2.0, 4.0):
+        qps = cap * frac
+        # request count must exceed max_queue plus the ~3 batches the
+        # pipeline holds in flight, so overload can actually fill the
+        # queue and trigger rejections
+        sched = AsyncScheduler(server, target_batch=8, deadline=0.01,
+                               max_queue=16, policy="reject")
+        OpenLoopGen(workload, qps=qps, n=64,
+                    seed=int(frac * 100)).drive(sched)
+        sched.result()
+        rep = sched.report(offered_qps=qps)
+        print(f"  {frac:4.2f}x  {rep.summary()}")
+
+    print("\nclosed-loop (concurrency 16, always-full batches):")
+    sched = AsyncScheduler(server, target_batch=8, deadline=5.0,
+                           max_queue=64, policy="block")
+    ClosedLoopGen(workload, concurrency=16, n=32).drive(sched)
+    outs = sched.result()
+    print(f"  batch sizes: {sorted({o.batch_size for o in outs})}, "
+          f"{sched.report().summary()}")
+
+    print("\nsync baseline vs double-buffered pipeline (same stream):")
+    reqs = OpenLoopGen(workload, qps=cap, n=24, seed=5).requests()
+    t0 = time.perf_counter()
+    server.serve_stream(reqs, target_batch=8, deadline=0.01)
+    sync_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    server.serve_stream(reqs, target_batch=8, deadline=0.01, pipeline=True)
+    pipe_s = time.perf_counter() - t0
+    print(f"  sync {sync_s * 1e3:.0f} ms -> pipelined {pipe_s * 1e3:.0f} ms "
+          f"({sync_s / pipe_s:.2f}x)")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

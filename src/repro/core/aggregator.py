@@ -76,19 +76,32 @@ class DeadlineAggregator:
     _q: deque = dataclasses.field(default_factory=deque)
     _oldest: Optional[float] = None
 
-    def offer(self, uid: int, queries: Sequence[Dict[str, int]],
-              now: float) -> List[Batch]:
+    def add(self, uid: int, queries: Sequence[Dict[str, int]],
+            now: float) -> None:
+        """Enqueue without polling — callers that must cap batches per
+        drain (the async scheduler) add everything first, then poll with
+        an explicit limit."""
         for q in queries:
             self._q.append((uid, q))
         if self._oldest is None and queries:
             self._oldest = now
+
+    def offer(self, uid: int, queries: Sequence[Dict[str, int]],
+              now: float) -> List[Batch]:
+        self.add(uid, queries, now)
         return self.poll(now)
 
-    def poll(self, now: float) -> List[Batch]:
+    def poll(self, now: float, limit: Optional[int] = None) -> List[Batch]:
+        """Form ready batches. ``limit`` caps how many full batches are
+        drained per call — the async scheduler drains one at a time so the
+        bounded admission queue (not this aggregator) absorbs overload and
+        backpressure can engage."""
         out: List[Batch] = []
-        while len(self._q) >= self.target_batch:
+        while len(self._q) >= self.target_batch \
+                and (limit is None or len(out) < limit):
             out.append(self._drain(self.target_batch))
-        if self._q and self._oldest is not None \
+        if self._q and (limit is None or len(out) < limit) \
+                and self._oldest is not None \
                 and now - self._oldest >= self.deadline:
             out.append(self._drain(len(self._q)))
         if not self._q:
@@ -96,6 +109,29 @@ class DeadlineAggregator:
         elif out:
             self._oldest = now
         return out
+
+    def pending(self) -> int:
+        """Queries currently buffered (counted against the scheduler's
+        bounded queue depth)."""
+        return len(self._q)
+
+    def next_deadline(self) -> Optional[float]:
+        """Logical time at which the oldest buffered item must be flushed;
+        None when empty (lets pollers sleep instead of busy-ticking)."""
+        return None if self._oldest is None else self._oldest + self.deadline
+
+    def evict_oldest(self, now: float
+                     ) -> Optional[Tuple[int, Dict[str, int]]]:
+        """Drop and return the oldest buffered item (shed-oldest
+        backpressure policy); None when empty. The deadline clock restarts
+        at ``now`` for the survivors — per-item enqueue times aren't
+        tracked, and inheriting the evicted item's age would flush the
+        newer remainder as an early undersized batch."""
+        if not self._q:
+            return None
+        item = self._q.popleft()
+        self._oldest = now if self._q else None
+        return item
 
     def flush(self) -> List[Batch]:
         return [self._drain(len(self._q))] if self._q else []

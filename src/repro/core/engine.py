@@ -56,8 +56,15 @@ class ErbiumEngine:
                                n_engines=self.n_engines,
                                interpret=self.interpret)
 
+    def encode_queries_host(self, queries: Sequence[Dict[str, int]]
+                            ) -> np.ndarray:
+        """Host-side half of the online path: raw query dicts -> dense
+        (B, C) int32 kernel input. Pure numpy — the async scheduler runs
+        this for batch N+1 while the device executes batch N."""
+        return self.encode(queries_to_arrays(list(queries)))
+
     def match_queries(self, queries: Sequence[Dict[str, int]]):
-        return self.match(self.encode(queries_to_arrays(list(queries))))
+        return self.match(self.encode_queries_host(queries))
 
     # -- rule update (hot reload) --------------------------------------------
     def reload(self, ruleset: RuleSet) -> float:

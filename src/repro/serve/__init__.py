@@ -1,0 +1,26 @@
+"""Serving subsystem: batched LM server + asynchronous submission pipeline.
+
+- ``engine``    — LMServer (prepare/execute split), Request/Completion
+- ``scheduler`` — AsyncScheduler (bounded admission, backpressure,
+                  double-buffered host/device overlap), run_pipelined
+- ``loadgen``   — open-loop (Poisson) / closed-loop (fixed concurrency)
+                  seeded load generators
+- ``metrics``   — per-request latency breakdown, device-idle-fraction
+"""
+from repro.serve.engine import (Completion, LMServer, PreparedBatch,
+                                Request)
+from repro.serve.loadgen import (ClosedLoopGen, OpenLoopGen,
+                                 SyntheticWorkload, poisson_arrivals,
+                                 uniform_arrivals)
+from repro.serve.metrics import (LatencyStats, MetricsCollector,
+                                 RequestTrace, RunReport)
+from repro.serve.scheduler import (AsyncScheduler, SchedulerConfig,
+                                   run_pipelined)
+
+__all__ = [
+    "Completion", "LMServer", "PreparedBatch", "Request",
+    "ClosedLoopGen", "OpenLoopGen", "SyntheticWorkload",
+    "poisson_arrivals", "uniform_arrivals",
+    "LatencyStats", "MetricsCollector", "RequestTrace", "RunReport",
+    "AsyncScheduler", "SchedulerConfig", "run_pipelined",
+]

@@ -6,10 +6,16 @@ integration layer forms large enough batches — so the server's front end IS
 the DeadlineAggregator (target batch + SLA deadline), and the MCT rule
 engine plugs in as a request-filtering stage ahead of the LM (the paper's
 Fig 14 co-location of MCT + Route Scoring on one accelerator).
+
+The batched path is split into a host-side **prepare** stage (token-matrix
+assembly + MCT query encoding, pure numpy) and a device-side **execute**
+stage (rule matching + decode loop). ``serve_stream(pipeline=True)`` and
+``repro.serve.scheduler`` exploit the split to overlap host encode of batch
+N+1 with device execution of batch N — the imbalance the paper's §5–6
+identify as the deployment's make-or-break.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
@@ -20,7 +26,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.aggregator import DeadlineAggregator
-from repro.models.registry import Model, build_model
+from repro.models.registry import build_model
 
 
 @dataclass
@@ -41,6 +47,20 @@ class Completion:
     prefill_ms: float
     decode_ms: float
     batch_size: int
+    truncated: bool = False       # hit the max_seq context limit before
+                                  # max_new_tokens were produced
+
+
+@dataclass
+class PreparedBatch:
+    """Host-side half of a batch: everything the device stage needs,
+    assembled without touching the accelerator."""
+    requests: List[Request]
+    toks: np.ndarray                      # (B, max_plen) int32
+    plens: List[int]
+    max_new: int
+    mct_encoded: Optional[np.ndarray]     # (Q, C) int32 or None
+    mct_owner: List[int] = field(default_factory=list)  # query -> request idx
 
 
 class LMServer:
@@ -48,40 +68,134 @@ class LMServer:
 
     def __init__(self, cfg: ModelConfig, params=None, *, ctx=None,
                  max_seq: int = 256, seed: int = 0,
-                 rule_filter=None):
+                 rule_filter=None, pad_batches: bool = True):
         self.cfg = cfg
         self.model = build_model(cfg, ctx)
         self.params = params if params is not None \
             else self.model.init(jax.random.PRNGKey(seed))
         self.max_seq = max_seq
         self.rule_filter = rule_filter      # optional ErbiumEngine stage
+        # batch-size bucketing: pad each batch to the next power of two so
+        # the jitted decode step compiles O(log B) variants instead of one
+        # per distinct batch size — without it, a deadline-formed stream of
+        # ragged batches is a compile storm. Rows are independent (masked
+        # attention), so padding never changes per-request results.
+        self.pad_batches = pad_batches
         self._decode = jax.jit(
             lambda p, c, t, pos: self.model.decode_step(p, c, t, pos),
             donate_argnums=(1,))
+        self._dev_params: Dict[object, object] = {}
 
-    # -- core batched path ----------------------------------------------------
+    # -- host-side prepare stage ----------------------------------------------
+    def prepare_batch(self, requests: Sequence[Request]) -> PreparedBatch:
+        """Assemble the token matrix and encode MCT queries — pure host
+        (numpy) work, safe to run while the device executes another batch."""
+        rs = list(requests)
+        plens = [len(r.tokens) for r in rs]
+        max_new = max((r.max_new_tokens for r in rs), default=0)
+        toks = np.zeros((len(rs), max(plens, default=0)), np.int32)
+        for i, r in enumerate(rs):
+            toks[i, :plens[i]] = r.tokens
+        mct_encoded, owner = None, []
+        if self.rule_filter is not None:
+            flat = []
+            for i, r in enumerate(rs):
+                for q in r.mct_queries:
+                    flat.append(q)
+                    owner.append(i)
+            if flat:
+                mct_encoded = self.rule_filter.encode_queries_host(flat)
+        return PreparedBatch(requests=rs, toks=toks, plens=plens,
+                             max_new=max_new, mct_encoded=mct_encoded,
+                             mct_owner=owner)
+
+    # -- device-side execute stage --------------------------------------------
+    def execute_prepared(self, pb: PreparedBatch, *,
+                         device=None) -> List[Completion]:
+        """Run the device half: MCT rule matching (drops infeasible
+        requests), then the batched prefill + decode loop. ``device`` pins
+        execution to a specific jax device (the scheduler round-robins
+        batches across devices when given several)."""
+        rs = pb.requests
+        if not rs:
+            return []
+        toks, plens, max_new = pb.toks, pb.plens, pb.max_new
+        if self.rule_filter is not None and pb.mct_encoded is not None:
+            keep = self._mct_feasible(rs, pb.mct_encoded, pb.mct_owner)
+            if not all(keep):
+                # slice the already-prepared rows — no host re-encode on
+                # the device thread's critical path
+                idx = [i for i, ok in enumerate(keep) if ok]
+                if not idx:
+                    return []
+                rs = [rs[i] for i in idx]
+                toks = toks[idx]
+                plens = [plens[i] for i in idx]
+                max_new = max(r.max_new_tokens for r in rs)
+        return self._run_decode(rs, toks, plens, max_new, device=device)
+
     def generate_batch(self, requests: Sequence[Request]) -> List[Completion]:
+        """prepare + execute in one synchronous call (the baseline path).
+        Applies the MCT filter stage when the server has one."""
         if not requests:
             return []
-        t0 = time.perf_counter()
-        B = len(requests)
-        plens = [len(r.tokens) for r in requests]
-        max_new = max(r.max_new_tokens for r in requests)
-        total = self.max_seq
-        assert max(plens) + max_new <= total, "max_seq too small"
+        return self.execute_prepared(self.prepare_batch(requests))
 
-        cache = self.model.init_cache(B, total)
+    def warmup(self, batch_sizes: Sequence[int] = (1, 8), *,
+               prompt_len: int = 4, max_new_tokens: int = 2) -> None:
+        """Pre-compile the decode step for the bucketed batch sizes so the
+        first live batches don't pay JIT latency (benchmarks call this
+        before timing)."""
+        for b in batch_sizes:
+            reqs = [Request(rid=-1 - i,
+                            tokens=np.ones(prompt_len, np.int32),
+                            max_new_tokens=max_new_tokens, mct_queries=[],
+                            connect_minutes=[])
+                    for i in range(b)]
+            self._run_decode(reqs, np.ones((b, prompt_len), np.int32),
+                             [prompt_len] * b, max_new_tokens)
+
+    def _params_on(self, device):
+        if device is None:
+            return self.params
+        if device not in self._dev_params:
+            self._dev_params[device] = jax.device_put(self.params, device)
+        return self._dev_params[device]
+
+    def _run_decode(self, rs: List[Request], toks: np.ndarray,
+                    plens: List[int], max_new: int,
+                    device=None) -> List[Completion]:
+        t0 = time.perf_counter()
+        B = len(rs)
+        total = self.max_seq
+        max_p = max(plens)
+        if max_p >= total:
+            # hard error, not an assert: the scheduler's worker-death
+            # propagation relies on this raising even under python -O,
+            # and proceeding would silently corrupt the KV cache
+            raise ValueError(
+                f"max_seq={total} too small for the prompt alone "
+                f"(longest prompt: {max_p})")
+
+        Bp = B
+        if self.pad_batches and B > 1:
+            Bp = 1 << (B - 1).bit_length()      # next power of two
+        if Bp != B:
+            toks = np.concatenate(
+                [toks, np.zeros((Bp - B, toks.shape[1]), np.int32)])
+
+        params = self._params_on(device)
+        cache = self.model.init_cache(Bp, total)
+        if device is not None:
+            cache = jax.device_put(cache, device)
         # prefill via the decode path, token by token up to each prompt len
         # (keeps one compiled step; a fused prefill kernel is the fast path
         # for attention archs and is exercised in tests via model.prefill)
-        toks = np.zeros((B, max(plens)), np.int32)
-        for i, r in enumerate(requests):
-            toks[i, :plens[i]] = r.tokens
         generated = [[] for _ in range(B)]
         last_logits = None
-        for pos in range(max(plens)):
+        for pos in range(max_p):
             step_tok = jnp.asarray(toks[:, pos:pos + 1])
-            last_logits, cache = self._decode(self.params, cache, step_tok,
+            last_logits, cache = self._decode(params, cache, step_tok,
                                               jnp.int32(pos))
         t1 = time.perf_counter()
 
@@ -89,55 +203,80 @@ class LMServer:
                          np.int32)
         for s in range(max_new):
             for i in range(B):
-                if s < requests[i].max_new_tokens:
+                if s < rs[i].max_new_tokens:
                     generated[i].append(int(cur[i]))
-            pos = max(plens) + s
+            pos = max_p + s
             if pos >= total - 1 or s == max_new - 1:
                 break
-            logits, cache = self._decode(self.params, cache,
+            logits, cache = self._decode(params, cache,
                                          jnp.asarray(cur[:, None]),
                                          jnp.int32(pos))
             cur = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        jax.block_until_ready(cur)
         t2 = time.perf_counter()
 
         return [Completion(rid=r.rid, tokens=np.asarray(g, np.int32),
                            prefill_ms=(t1 - t0) * 1e3,
-                           decode_ms=(t2 - t1) * 1e3, batch_size=B)
-                for r, g in zip(requests, generated)]
+                           decode_ms=(t2 - t1) * 1e3, batch_size=B,
+                           truncated=len(g) < r.max_new_tokens)
+                for r, g in zip(rs, generated)]
 
     # -- continuous batching front end ----------------------------------------
-    def serve_stream(self, requests: Sequence[Request], *,
+    def form_batches(self, requests: Sequence[Request], *,
                      target_batch: int = 8, deadline: float = 0.05
-                     ) -> List[Completion]:
-        """Aggregate an arrival-ordered request stream with the paper's
-        deadline policy, then run batches."""
+                     ) -> List[List[Request]]:
+        """Replay an arrival-ordered request stream through the paper's
+        deadline policy; logical time, so batch composition is
+        deterministic for a given stream."""
         agg = DeadlineAggregator(target_batch=target_batch,
                                  deadline=deadline)
-        by_rid = {r.rid: r for r in requests}
         batches = []
         for r in sorted(requests, key=lambda x: x.arrival):
-            batches.extend(agg.offer(r.rid, [{"rid": r.rid}], now=r.arrival))
+            batches.extend(agg.offer(r.rid, [r], now=r.arrival))
         batches.extend(agg.flush())
+        return [[q for q in b.queries] for b in batches]
+
+    def serve_stream(self, requests: Sequence[Request], *,
+                     target_batch: int = 8, deadline: float = 0.05,
+                     pipeline: bool = False, pipeline_depth: int = 2,
+                     devices=None, metrics=None) -> List[Completion]:
+        """Aggregate an arrival-ordered request stream with the paper's
+        deadline policy, then run batches.
+
+        ``pipeline=False`` is the synchronous baseline: prepare and execute
+        strictly alternate, the device idles during every host encode.
+        ``pipeline=True`` pushes the same deterministic batch sequence
+        through the double-buffered scheduler pipeline — identical
+        completions, overlapped host/device work.
+        """
+        groups = self.form_batches(requests, target_batch=target_batch,
+                                   deadline=deadline)
+        if pipeline:
+            from repro.serve.scheduler import run_pipelined
+            return run_pipelined(self, groups, pipeline_depth=pipeline_depth,
+                                 devices=devices, metrics=metrics)
         out: List[Completion] = []
-        for b in batches:
-            rs = [by_rid[uid] for uid, _ in b.ts_index]
-            if self.rule_filter is not None:
-                rs = self._filter(rs)
-            out.extend(self.generate_batch(rs))
+        for rs in groups:
+            te0 = time.perf_counter()
+            pb = self.prepare_batch(rs)
+            te1 = time.perf_counter()
+            comps = self.execute_prepared(pb)
+            td1 = time.perf_counter()
+            if metrics is not None:
+                rids = [r.rid for r in rs]
+                metrics.on_encode(rids, te0, te1)
+                metrics.on_device(rids, te1, td1)
+                metrics.on_complete([c.rid for c in comps], td1)
+            out.extend(comps)
         return out
 
-    def _filter(self, rs: List[Request]) -> List[Request]:
-        """MCT filtering stage: batch ALL connection queries of the batch
-        into ONE rule-engine call (the paper's aggregation lesson), then drop
-        requests with an infeasible connection (connect time < MCT)."""
-        flat, owner = [], []
-        for i, r in enumerate(rs):
-            for q in r.mct_queries:
-                flat.append(q)
-                owner.append(i)
-        if not flat:
-            return list(rs)
-        dec, _, _ = self.rule_filter.match_queries(flat)
+    def _mct_feasible(self, rs: List[Request], encoded: np.ndarray,
+                      owner: List[int]) -> List[bool]:
+        """MCT filtering stage: all connection queries of the batch were
+        encoded host-side into ONE kernel input (the paper's aggregation
+        lesson); match on device, then drop requests with an infeasible
+        connection (connect time < MCT)."""
+        dec, _, _ = self.rule_filter.match(encoded)
         dec = np.asarray(dec)
         feasible = [True] * len(rs)
         pos = {i: 0 for i in range(len(rs))}
@@ -150,4 +289,4 @@ class LMServer:
             pos[i] += 1
             if have < mct:
                 feasible[i] = False
-        return [r for r, ok in zip(rs, feasible) if ok]
+        return feasible

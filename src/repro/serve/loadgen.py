@@ -1,0 +1,146 @@
+"""Open-loop and closed-loop load generation for the serving pipeline.
+
+The paper's §6 regime — "the CPU cannot generate enough load to saturate
+the accelerator" — needs two controllable axes to reproduce:
+
+- **arrival process**: open loop (Poisson arrivals at a target QPS,
+  independent of service rate — models front-end fan-in) vs closed loop
+  (fixed concurrency, each completion releases the next submission —
+  models a worker pool).
+- **host-side work per request**: prompt length drives tokenisation cost,
+  MCT query count drives encoder cost. Dialing these up makes the host the
+  bottleneck and the device-idle-fraction climb, which is the imbalance
+  curve the fig13 harness sweeps.
+
+Everything is seeded: the same (seed, qps, n) always yields the same
+arrival schedule and request contents.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serve.engine import Request
+
+
+def poisson_arrivals(n: int, qps: float, *, seed: int = 0,
+                     start: float = 0.0) -> np.ndarray:
+    """Cumulative arrival times of a Poisson process at rate ``qps``."""
+    rng = np.random.default_rng(seed)
+    return start + np.cumsum(rng.exponential(1.0 / qps, size=n))
+
+
+def uniform_arrivals(n: int, qps: float, *, start: float = 0.0) -> np.ndarray:
+    """Deterministic evenly-spaced arrivals (useful as a control)."""
+    return start + (np.arange(n, dtype=np.float64) + 1.0) / qps
+
+
+@dataclass
+class SyntheticWorkload:
+    """Seeded request factory with dialable host-side work per request."""
+    vocab: int = 256
+    prompt_len: int = 8
+    max_new_tokens: int = 4
+    n_mct_queries: int = 0        # >0 needs ``ruleset`` for query synthesis
+    ruleset: object = None
+    seed: int = 0
+
+    def build(self, n: int, arrivals: Optional[np.ndarray] = None,
+              rid_base: int = 0) -> List[Request]:
+        rng = np.random.default_rng(self.seed)
+        mct_pool: List[dict] = []
+        if self.n_mct_queries > 0:
+            if self.ruleset is None:
+                raise ValueError("n_mct_queries > 0 requires a ruleset")
+            from repro.core.rules import generate_queries
+            mct_pool = generate_queries(self.ruleset,
+                                        n * self.n_mct_queries,
+                                        seed=self.seed)
+        out = []
+        for i in range(n):
+            qs = mct_pool[i * self.n_mct_queries:(i + 1) * self.n_mct_queries]
+            out.append(Request(
+                rid=rid_base + i,
+                tokens=rng.integers(1, self.vocab,
+                                    self.prompt_len).astype(np.int32),
+                max_new_tokens=self.max_new_tokens,
+                arrival=float(arrivals[i]) if arrivals is not None else 0.0,
+                mct_queries=list(qs),
+                # generous connect times: the MCT stage encodes/matches but
+                # does not drop, so loadgen comparisons stay apples-to-apples
+                connect_minutes=[10 ** 6] * len(qs)))
+        return out
+
+
+@dataclass
+class OpenLoopGen:
+    """Poisson arrivals at ``qps``, submitted regardless of completions."""
+    workload: SyntheticWorkload
+    qps: float
+    n: int
+    seed: int = 0
+
+    def requests(self) -> List[Request]:
+        """Arrival-stamped requests for deterministic logical-time replay
+        (``LMServer.form_batches`` / ``serve_stream``)."""
+        arr = poisson_arrivals(self.n, self.qps, seed=self.seed)
+        return self.workload.build(self.n, arrivals=arr)
+
+    def drive(self, scheduler, *, time_scale: float = 1.0) -> int:
+        """Live submission: sleep out the schedule, fire-and-forget into
+        the scheduler (never waits on completions — open loop). Returns
+        how many submissions were accepted."""
+        reqs = self.requests()
+        t0 = time.perf_counter()
+        accepted = 0
+        for r in reqs:
+            delay = r.arrival * time_scale - (time.perf_counter() - t0)
+            if delay > 0:
+                time.sleep(delay)
+            accepted += bool(scheduler.submit(r))
+        return accepted
+
+
+@dataclass
+class ClosedLoopGen:
+    """Fixed-concurrency loop: ``concurrency`` requests in flight at all
+    times; each completion releases the next submission."""
+    workload: SyntheticWorkload
+    concurrency: int
+    n: int
+    seed: int = 0
+    _sem: threading.Semaphore = field(init=False, repr=False, default=None)
+
+    def drive(self, scheduler) -> int:
+        reqs = self.workload.build(self.n)
+        self._sem = threading.Semaphore(self.concurrency)
+        prev_done = scheduler.on_complete
+        prev_drop = scheduler.on_drop
+
+        def _release(completion):
+            self._sem.release()
+            if prev_done is not None:
+                prev_done(completion)
+
+        def _release_drop(rid):
+            # a request that will never complete (shed, MCT-filtered) must
+            # still return its permit or the loop wedges at `concurrency`
+            # losses
+            self._sem.release()
+            if prev_drop is not None:
+                prev_drop(rid)
+
+        scheduler.on_complete = _release
+        scheduler.on_drop = _release_drop
+        accepted = 0
+        for r in reqs:
+            self._sem.acquire()
+            if scheduler.submit(r):
+                accepted += 1
+            else:
+                self._sem.release()    # rejected: no completion will come
+        return accepted

@@ -1,0 +1,251 @@
+"""Serving metrics: per-request latency breakdown + device utilisation.
+
+The paper's key end-to-end signal (§5–6) is *imbalance*: the accelerator
+only pays off when the host can keep it fed, so the numbers that matter are
+(a) where each request's latency goes — queue wait vs host encode vs device
+execution vs drain — and (b) what fraction of the run the device sat idle.
+``MetricsCollector`` is thread-safe and shared by the synchronous baseline,
+the pipelined executor, and the live async scheduler, so all three report
+comparable numbers.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class RequestTrace:
+    rid: int
+    arrival: Optional[float] = None
+    admitted: Optional[float] = None
+    encode_start: Optional[float] = None
+    encode_end: Optional[float] = None
+    device_start: Optional[float] = None
+    device_end: Optional[float] = None
+    completed: Optional[float] = None
+    rejected: bool = False
+    shed: bool = False
+
+    def _ms(self, a: Optional[float], b: Optional[float]) -> Optional[float]:
+        return (b - a) * 1e3 if a is not None and b is not None else None
+
+    @property
+    def queue_wait_ms(self):
+        return self._ms(self.arrival if self.arrival is not None
+                        else self.admitted, self.encode_start)
+
+    @property
+    def encode_ms(self):
+        return self._ms(self.encode_start, self.encode_end)
+
+    @property
+    def device_ms(self):
+        return self._ms(self.device_start, self.device_end)
+
+    @property
+    def drain_ms(self):
+        return self._ms(self.device_end, self.completed)
+
+    @property
+    def total_ms(self):
+        return self._ms(self.arrival if self.arrival is not None
+                        else self.admitted, self.completed)
+
+
+@dataclass
+class LatencyStats:
+    n: int
+    mean_ms: float
+    p50_ms: float
+    p95_ms: float
+    p99_ms: float
+    max_ms: float
+
+    @classmethod
+    def of(cls, values_ms: List[float]) -> "LatencyStats":
+        if not values_ms:
+            return cls(0, 0.0, 0.0, 0.0, 0.0, 0.0)
+        v = np.asarray(values_ms, np.float64)
+        return cls(n=len(values_ms), mean_ms=float(v.mean()),
+                   p50_ms=float(np.percentile(v, 50)),
+                   p95_ms=float(np.percentile(v, 95)),
+                   p99_ms=float(np.percentile(v, 99)),
+                   max_ms=float(v.max()))
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"n": self.n, "mean_ms": self.mean_ms, "p50_ms": self.p50_ms,
+                "p95_ms": self.p95_ms, "p99_ms": self.p99_ms,
+                "max_ms": self.max_ms}
+
+
+def _merged_span(intervals: List[Tuple[float, float]]) -> float:
+    """Total covered time of possibly-overlapping intervals (overlap happens
+    with multi-device round-robin execution)."""
+    if not intervals:
+        return 0.0
+    out = 0.0
+    cur_a, cur_b = None, None
+    for a, b in sorted(intervals):
+        if cur_b is None or a > cur_b:
+            if cur_b is not None:
+                out += cur_b - cur_a
+            cur_a, cur_b = a, b
+        else:
+            cur_b = max(cur_b, b)
+    out += cur_b - cur_a
+    return out
+
+
+@dataclass
+class RunReport:
+    n_requests: int
+    n_completed: int
+    n_rejected: int
+    n_shed: int
+    offered_qps: Optional[float]
+    achieved_qps: float
+    span_s: float
+    device_busy_s: float
+    device_idle_fraction: float
+    max_queue_depth: int
+    batch_sizes: List[int]
+    breakdown: Dict[str, LatencyStats]
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "n_requests": self.n_requests,
+            "n_completed": self.n_completed,
+            "n_rejected": self.n_rejected,
+            "n_shed": self.n_shed,
+            "offered_qps": self.offered_qps,
+            "achieved_qps": self.achieved_qps,
+            "span_s": self.span_s,
+            "device_busy_s": self.device_busy_s,
+            "device_idle_fraction": self.device_idle_fraction,
+            "max_queue_depth": self.max_queue_depth,
+            "mean_batch": float(np.mean(self.batch_sizes))
+            if self.batch_sizes else 0.0,
+            "breakdown": {k: v.as_dict() for k, v in self.breakdown.items()},
+        }
+
+    def summary(self) -> str:
+        t = self.breakdown.get("total")
+        return (f"{self.n_completed}/{self.n_requests} done "
+                f"({self.n_rejected} rejected, {self.n_shed} shed) "
+                f"achieved {self.achieved_qps:.1f} q/s"
+                + (f" of offered {self.offered_qps:.1f}"
+                   if self.offered_qps else "")
+                + f", device idle {self.device_idle_fraction * 100:.0f}%"
+                + (f", p50/p95/p99 {t.p50_ms:.0f}/{t.p95_ms:.0f}/"
+                   f"{t.p99_ms:.0f} ms" if t and t.n else ""))
+
+
+class MetricsCollector:
+    """Thread-safe event sink for the serving pipeline."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._traces: Dict[int, RequestTrace] = {}
+        self._device_busy: List[Tuple[float, float]] = []
+        self._batch_sizes: List[int] = []
+        self.max_queue_depth = 0
+
+    def _t(self, rid: int) -> RequestTrace:
+        tr = self._traces.get(rid)
+        if tr is None:
+            tr = self._traces[rid] = RequestTrace(rid)
+        return tr
+
+    # -- event hooks (called from submitter / batcher / device threads) ------
+    def on_arrival(self, rid: int, t: float):
+        with self._lock:
+            self._t(rid).arrival = t
+
+    def on_admit(self, rid: int, t: float):
+        with self._lock:
+            tr = self._t(rid)
+            tr.admitted = t
+            if tr.arrival is None:
+                tr.arrival = t
+
+    def on_reject(self, rid: int, t: float):
+        with self._lock:
+            tr = self._t(rid)
+            tr.rejected = True
+            if tr.arrival is None:
+                tr.arrival = t
+
+    def on_shed(self, rid: int, t: float):
+        with self._lock:
+            self._t(rid).shed = True
+
+    def on_encode(self, rids: List[int], t0: float, t1: float):
+        with self._lock:
+            for rid in rids:
+                tr = self._t(rid)
+                tr.encode_start, tr.encode_end = t0, t1
+                if tr.arrival is None:
+                    tr.arrival = t0
+
+    def on_device(self, rids: List[int], t0: float, t1: float):
+        with self._lock:
+            self._device_busy.append((t0, t1))
+            self._batch_sizes.append(len(rids))
+            for rid in rids:
+                tr = self._t(rid)
+                tr.device_start, tr.device_end = t0, t1
+
+    def on_complete(self, rids: List[int], t: float):
+        with self._lock:
+            for rid in rids:
+                self._t(rid).completed = t
+
+    def note_queue_depth(self, depth: int):
+        with self._lock:
+            if depth > self.max_queue_depth:
+                self.max_queue_depth = depth
+
+    # -- aggregation ---------------------------------------------------------
+    def report(self, *, offered_qps: Optional[float] = None) -> RunReport:
+        with self._lock:
+            traces = list(self._traces.values())
+            busy = list(self._device_busy)
+            batch_sizes = list(self._batch_sizes)
+            max_depth = self.max_queue_depth
+        done = [t for t in traces if t.completed is not None]
+        starts = [t.arrival for t in traces if t.arrival is not None]
+        ends = [t.completed for t in done]
+        span = (max(ends) - min(starts)) if starts and ends else 0.0
+        busy_s = _merged_span(busy)
+        idle = 1.0 - busy_s / span if span > 0 else 0.0
+        breakdown = {
+            "queue_wait": LatencyStats.of(
+                [t.queue_wait_ms for t in done
+                 if t.queue_wait_ms is not None]),
+            "encode": LatencyStats.of(
+                [t.encode_ms for t in done if t.encode_ms is not None]),
+            "device": LatencyStats.of(
+                [t.device_ms for t in done if t.device_ms is not None]),
+            "drain": LatencyStats.of(
+                [t.drain_ms for t in done if t.drain_ms is not None]),
+            "total": LatencyStats.of(
+                [t.total_ms for t in done if t.total_ms is not None]),
+        }
+        return RunReport(
+            n_requests=len(traces),
+            n_completed=len(done),
+            n_rejected=sum(t.rejected for t in traces),
+            n_shed=sum(t.shed for t in traces),
+            offered_qps=offered_qps,
+            achieved_qps=len(done) / span if span > 0 else 0.0,
+            span_s=span,
+            device_busy_s=busy_s,
+            device_idle_fraction=max(0.0, min(1.0, idle)),
+            max_queue_depth=max_depth,
+            batch_sizes=batch_sizes,
+            breakdown=breakdown,
+        )

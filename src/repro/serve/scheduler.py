@@ -1,0 +1,381 @@
+"""Asynchronous submission pipeline with bounded admission + backpressure.
+
+The paper's deployment lesson (§5–6): the accelerator's headline gains
+evaporate when the host submission path can't keep it fed — batches form
+too slowly, the CPU saturates first, and end-to-end the system gets slower
+*and* more expensive. This module makes that regime reproducible:
+
+    submit() --bounded queue / backpressure--> [batcher thread]
+        host prepare (token matrix + MCT encode, numpy)
+              --depth-k handoff--> [device thread]
+        rule match + decode loop on the accelerator
+
+The handoff queue holds ``pipeline_depth`` prepared batches (2 = classic
+double buffering): host-side encode of batch N+1 overlaps device execution
+of batch N; ``jax.block_until_ready`` inside the device stage marks the
+true device-busy interval for the idle-fraction metric.
+
+Backpressure policies when the admission queue (pending + aggregator
+buffer) is at ``max_queue``:
+
+- ``reject``      — refuse the new request (submit returns False)
+- ``shed_oldest`` — evict the oldest queued request, admit the new one
+- ``block``       — make the submitter wait (closed-loop behaviour)
+
+``run_pipelined`` is the deterministic sibling: it takes pre-formed batch
+groups (logical-time aggregation, see ``LMServer.form_batches``) and pushes
+them through the same two-stage pipeline — bit-identical completions to the
+synchronous baseline, overlapped host/device work.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence
+
+from repro.core.aggregator import DeadlineAggregator
+from repro.serve.engine import Completion, LMServer, Request
+from repro.serve.metrics import MetricsCollector
+
+POLICIES = ("reject", "shed_oldest", "block")
+
+
+@dataclass
+class SchedulerConfig:
+    target_batch: int = 8
+    deadline: float = 0.05          # seconds a request may wait for peers
+    max_queue: int = 64             # bounded admission depth (requests)
+    policy: str = "reject"
+    pipeline_depth: int = 2         # prepared batches in flight (2 = double
+                                    # buffering)
+    devices: Optional[Sequence] = None  # round-robin device placement
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}")
+
+
+class _DeviceWorker:
+    """Consumes prepared batches from the handoff queue, executes them on
+    the device (round-robin when several), records busy intervals."""
+
+    def __init__(self, server: LMServer, depth: int, metrics,
+                 on_complete: Optional[Callable[[Completion], None]] = None,
+                 on_drop: Optional[Callable[[int], None]] = None,
+                 devices=None, clock=time.perf_counter):
+        self.server = server
+        self.handoff: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
+        self.metrics = metrics
+        self.on_complete = on_complete
+        self.on_drop = on_drop          # rid sinks without a Completion
+        self.devices = list(devices) if devices else [None]
+        self.clock = clock
+        self.completions: List[Completion] = []
+        self.error: Optional[BaseException] = None
+        self._n = 0
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+
+    def start(self):
+        self._thread.start()
+
+    def put(self, pb):
+        # bounded put that stays responsive to worker death: if the device
+        # thread died with the queue full, a plain put() would block every
+        # producer forever and bury the error
+        while True:
+            if self.error is not None:
+                raise RuntimeError("device worker failed") from self.error
+            try:
+                self.handoff.put(pb, timeout=0.05)
+                return
+            except queue.Full:
+                continue
+
+    def finish(self) -> List[Completion]:
+        try:
+            self.put(None)
+        except RuntimeError:
+            pass                        # worker already dead; join + raise
+        self._thread.join()
+        if self.error is not None:
+            raise RuntimeError("device worker failed") from self.error
+        return self.completions
+
+    def _loop(self):
+        try:
+            while True:
+                pb = self.handoff.get()
+                if pb is None:
+                    return
+                dev = self.devices[self._n % len(self.devices)]
+                self._n += 1
+                rids = [r.rid for r in pb.requests]
+                t0 = self.clock()
+                comps = self.server.execute_prepared(pb, device=dev)
+                t1 = self.clock()
+                if self.metrics is not None:
+                    self.metrics.on_device(rids, t0, t1)
+                    self.metrics.on_complete([c.rid for c in comps], t1)
+                self.completions.extend(comps)
+                if self.on_complete is not None:
+                    for c in comps:
+                        self.on_complete(c)
+                if self.on_drop is not None:
+                    done = {c.rid for c in comps}
+                    for rid in rids:
+                        if rid not in done:    # MCT filter drop
+                            self.on_drop(rid)
+        except BaseException as e:          # surfaced by put()/finish()
+            self.error = e
+
+
+def run_pipelined(server: LMServer, groups: Sequence[Sequence[Request]], *,
+                  pipeline_depth: int = 2, devices=None,
+                  metrics: Optional[MetricsCollector] = None
+                  ) -> List[Completion]:
+    """Execute pre-formed batches through the two-stage pipeline.
+
+    Batch composition is fixed by the caller (deterministic), so the result
+    is bit-identical to running the groups synchronously — only the
+    host/device overlap differs.
+    """
+    worker = _DeviceWorker(server, pipeline_depth, metrics, devices=devices)
+    worker.start()
+    for rs in groups:
+        rs = list(rs)
+        if not rs:
+            continue
+        t0 = time.perf_counter()
+        pb = server.prepare_batch(rs)       # overlaps device execution
+        t1 = time.perf_counter()
+        if metrics is not None:
+            metrics.on_encode([r.rid for r in rs], t0, t1)
+        worker.put(pb)
+    return worker.finish()
+
+
+class AsyncScheduler:
+    """Live continuous-batching front end with bounded admission.
+
+    Thread layout: submitters call :meth:`submit`; a batcher thread drains
+    the admission queue through a :class:`DeadlineAggregator` (wall-clock
+    deadline), host-prepares one batch at a time, and hands it to the
+    device worker through the depth-``pipeline_depth`` queue. Draining one
+    batch per poll is what makes backpressure real — overload accumulates
+    in the *bounded* admission queue instead of an unbounded internal
+    buffer.
+    """
+
+    def __init__(self, server: LMServer,
+                 config: Optional[SchedulerConfig] = None, *,
+                 metrics: Optional[MetricsCollector] = None,
+                 on_complete: Optional[Callable[[Completion], None]] = None,
+                 **overrides):
+        if config is None:
+            config = SchedulerConfig(**overrides)
+        elif overrides:
+            raise ValueError("pass either config or keyword overrides")
+        self.cfg = config
+        self.server = server
+        self.metrics = metrics if metrics is not None else MetricsCollector()
+        self._epoch = time.perf_counter()
+        self._lock = threading.Lock()
+        self._have_work = threading.Condition(self._lock)
+        self._space = threading.Condition(self._lock)
+        self._pending: deque = deque()
+        self._agg = DeadlineAggregator(target_batch=config.target_batch,
+                                       deadline=config.deadline)
+        self._closed = False
+        self.n_submitted = 0
+        self.n_rejected = 0
+        self.n_shed = 0
+        self._worker = _DeviceWorker(server, config.pipeline_depth,
+                                     self.metrics, on_complete=on_complete,
+                                     devices=config.devices,
+                                     clock=self._now)
+        self._batcher = threading.Thread(target=self._batch_loop, daemon=True)
+        self._batcher_error: Optional[BaseException] = None
+        self._started = False
+        self._results: Optional[List[Completion]] = None
+
+    # -- time ----------------------------------------------------------------
+    def _now(self) -> float:
+        return time.perf_counter() - self._epoch
+
+    # completion/drop hooks (closed-loop generators chain onto these)
+    @property
+    def on_complete(self):
+        return self._worker.on_complete
+
+    @on_complete.setter
+    def on_complete(self, cb):
+        self._worker.on_complete = cb
+
+    @property
+    def on_drop(self):
+        return self._worker.on_drop
+
+    @on_drop.setter
+    def on_drop(self, cb):
+        self._worker.on_drop = cb
+
+    # -- public API ------------------------------------------------------------
+    def start(self) -> "AsyncScheduler":
+        with self._lock:
+            if self._started:
+                return self
+            self._started = True
+        self._worker.start()
+        self._batcher.start()
+        return self
+
+    def _depth_locked(self) -> int:
+        return len(self._pending) + self._agg.pending()
+
+    def _pipeline_dead(self) -> bool:
+        return self._batcher_error is not None \
+            or self._worker.error is not None
+
+    @property
+    def queue_depth(self) -> int:
+        with self._lock:
+            return self._depth_locked()
+
+    def submit(self, req: Request, *, arrival: Optional[float] = None) -> bool:
+        """Offer a request; returns False when rejected by backpressure."""
+        self.start()                 # idempotent, lock-guarded
+        now = self._now()
+        shed_rid: Optional[int] = None
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            if self.cfg.policy == "block":
+                while self._depth_locked() >= self.cfg.max_queue \
+                        and not self._closed and not self._pipeline_dead():
+                    self._space.wait(timeout=0.1)
+                if self._closed:
+                    # close() raced our wait; the batcher may already have
+                    # flushed and exited — appending now would lose the
+                    # request silently
+                    raise RuntimeError("scheduler is closed")
+                if self._pipeline_dead():
+                    # the batcher/device thread died, so queue space will
+                    # never free up — fail fast instead of wedging the
+                    # submitter (result() carries the root cause)
+                    raise RuntimeError("scheduler pipeline failed; "
+                                       "call result() for the cause")
+            elif self._depth_locked() >= self.cfg.max_queue:
+                if self.cfg.policy == "reject":
+                    self.n_rejected += 1
+                    self.metrics.on_reject(req.rid, now)
+                    return False
+                # shed_oldest: evict from the aggregator buffer first (the
+                # overall oldest), then from the pending deque
+                victim = self._agg.evict_oldest(now)
+                if victim is None and self._pending:
+                    victim = self._pending.popleft()
+                if victim is not None:
+                    self.n_shed += 1
+                    self.metrics.on_shed(victim[1].rid, now)
+                    shed_rid = victim[1].rid
+            self._pending.append((req.rid, req))
+            self.n_submitted += 1
+            # arrival/admit recorded only once the request's fate is
+            # decided — a submit that raised on a close() race must not
+            # leave a phantom trace inflating the report
+            self.metrics.on_arrival(req.rid, arrival if arrival is not None
+                                    else now)
+            self.metrics.on_admit(req.rid, now)
+            self.metrics.note_queue_depth(self._depth_locked())
+            self._have_work.notify()
+        # user callback outside the non-reentrant lock: an on_drop that
+        # reads queue_depth or re-submits must not deadlock (the device
+        # thread already calls it unlocked — same contract)
+        if shed_rid is not None and self._worker.on_drop is not None:
+            self._worker.on_drop(shed_rid)
+        return True
+
+    def close(self):
+        """Stop accepting requests and flush everything still queued."""
+        with self._lock:
+            self._closed = True
+            self._have_work.notify_all()
+            self._space.notify_all()
+
+    def result(self) -> List[Completion]:
+        """close() if needed, wait for the pipeline to drain, and return
+        all completions (in execution order)."""
+        if self._results is not None:
+            return self._results
+        if not self._started:
+            self.start()       # zero submissions: drain cleanly to []
+        self.close()
+        self._batcher.join()
+        completions = self._worker.finish()     # raises on device error
+        if self._batcher_error is not None:
+            raise RuntimeError("batcher thread failed") \
+                from self._batcher_error
+        self._results = completions
+        return self._results
+
+    def report(self, *, offered_qps: Optional[float] = None):
+        rep = self.metrics.report(offered_qps=offered_qps)
+        rep.n_rejected = max(rep.n_rejected, self.n_rejected)
+        rep.n_shed = max(rep.n_shed, self.n_shed)
+        return rep
+
+    # -- batcher thread --------------------------------------------------------
+    def _take_batch(self) -> Optional[List[Request]]:
+        """Block until one batch is ready (target size or deadline) or the
+        scheduler is closed and drained. Returns None to stop."""
+        with self._lock:
+            while True:
+                # move newly-submitted requests into the aggregator, then
+                # drain at most ONE batch — overload stays in the bounded
+                # admission state where backpressure can see it
+                now = self._now()
+                while self._pending:
+                    rid, req = self._pending.popleft()
+                    self._agg.add(rid, [req], now=now)
+                batches = self._agg.poll(now, limit=1)
+                if batches:
+                    self._space.notify_all()
+                    return [q for q in batches[0].queries]
+                if self._closed:
+                    batches = self._agg.flush()
+                    if batches:
+                        self._space.notify_all()
+                        return [q for q in batches[0].queries]
+                    return None
+                # idle: sleep until a submit/close notification; partial
+                # batch buffered: sleep just long enough to fire its
+                # deadline flush (no busy-ticking in either case)
+                nd = self._agg.next_deadline()
+                timeout = None if nd is None \
+                    else max(nd - self._now(), 1e-4)
+                self._have_work.wait(timeout=timeout)
+
+    def _batch_loop(self):
+        try:
+            while True:
+                rs = self._take_batch()
+                if rs is None:
+                    return
+                t0 = self._now()
+                pb = self.server.prepare_batch(rs)
+                t1 = self._now()
+                self.metrics.on_encode([r.rid for r in rs], t0, t1)
+                # blocks while `pipeline_depth` batches are already in
+                # flight — that stall is what pushes overload back onto
+                # the bounded admission queue
+                self._worker.put(pb)
+        except BaseException as e:          # surfaced by result()
+            self._batcher_error = e
+            with self._lock:
+                # blocked submitters must not wait for space that will
+                # never free up
+                self._space.notify_all()
+                self._have_work.notify_all()

@@ -5,7 +5,11 @@ import pytest
 
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the 'test' extra (pip install -e .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.models.attention import (attention_scores_decode,
                                     blockwise_attention)

@@ -6,7 +6,11 @@ import pytest
 
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the 'test' extra (pip install -e .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels.ops import _pad_to, device_table, match_rules
 from repro.kernels.ref import rule_match_ref

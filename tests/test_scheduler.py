@@ -1,0 +1,204 @@
+"""Async submission pipeline: backpressure bounds, open/closed-loop batch
+formation, async-vs-sync bit-identity, multi-device round-robin."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.serve import (AsyncScheduler, ClosedLoopGen, LMServer,
+                         MetricsCollector, OpenLoopGen, SchedulerConfig,
+                         SyntheticWorkload, poisson_arrivals)
+
+
+@pytest.fixture(scope="module")
+def server():
+    cfg = get_config("llama3.2-3b").reduced()
+    return LMServer(cfg, max_seq=48)
+
+
+@pytest.fixture(scope="module")
+def workload(server):
+    return SyntheticWorkload(vocab=server.cfg.vocab, prompt_len=6,
+                             max_new_tokens=3, seed=1)
+
+
+def test_poisson_arrivals_seeded():
+    a = poisson_arrivals(64, 100.0, seed=5)
+    b = poisson_arrivals(64, 100.0, seed=5)
+    np.testing.assert_array_equal(a, b)
+    assert np.all(np.diff(a) > 0)
+    # mean inter-arrival ~ 1/qps
+    assert 0.5 / 100.0 < np.diff(a).mean() < 2.0 / 100.0
+
+
+def test_async_identical_to_sync_baseline(server, workload):
+    """(c) The pipelined path must be bit-identical to the synchronous
+    baseline for the same request stream."""
+    reqs = OpenLoopGen(workload, qps=200.0, n=12, seed=7).requests()
+    sync = server.serve_stream(reqs, target_batch=4, deadline=0.01)
+    pipe = server.serve_stream(reqs, target_batch=4, deadline=0.01,
+                               pipeline=True)
+    assert len(sync) == len(pipe) == 12
+    by_sync = {c.rid: c for c in sync}
+    for c in pipe:
+        ref = by_sync[c.rid]
+        np.testing.assert_array_equal(ref.tokens, c.tokens)
+        assert ref.batch_size == c.batch_size
+        assert ref.truncated == c.truncated
+
+
+def test_backpressure_bounds_queue_under_overload(server, workload):
+    """(a) Under a 4x-overload burst the bounded queue never exceeds its
+    configured depth, rejections happen, and the report carries the
+    device-idle-fraction signal."""
+    max_queue = 8
+    sched = AsyncScheduler(server, target_batch=4, deadline=0.002,
+                           max_queue=max_queue, policy="reject")
+    reqs = workload.build(4 * max_queue)
+    accepted = sum(sched.submit(r) for r in reqs)
+    outs = sched.result()
+    rep = sched.report(offered_qps=1000.0)
+    assert rep.max_queue_depth <= max_queue
+    assert sched.n_rejected > 0
+    assert accepted + sched.n_rejected == 4 * max_queue
+    assert len(outs) == accepted
+    assert 0.0 <= rep.device_idle_fraction <= 1.0
+    assert rep.breakdown["device"].n == accepted
+
+
+def test_shed_oldest_policy_bounds_queue(server, workload):
+    sched = AsyncScheduler(server, target_batch=4, deadline=0.002,
+                           max_queue=8, policy="shed_oldest")
+    reqs = workload.build(32, rid_base=100)
+    for r in reqs:
+        assert sched.submit(r)       # shed admits by evicting, never refuses
+    outs = sched.result()
+    rep = sched.report()
+    assert rep.max_queue_depth <= 8
+    assert sched.n_shed + len(outs) == 32
+
+
+def test_open_loop_low_qps_small_batches(server, workload):
+    """(b1) Open loop far below capacity: deadline flushes dominate, so
+    batches stay well under target size (logical-time replay)."""
+    gen = OpenLoopGen(workload, qps=10.0, n=12, seed=3)
+    reqs = gen.requests()   # mean gap 100 ms >> 5 ms deadline
+    outs = server.serve_stream(reqs, target_batch=8, deadline=0.005,
+                               pipeline=True)
+    assert len(outs) == 12
+    assert max(o.batch_size for o in outs) <= 2
+
+
+def test_closed_loop_fills_target_batches(server, workload):
+    """(b2) Closed loop with concurrency >= target: every batch forms at
+    exactly target size."""
+    sched = AsyncScheduler(server, target_batch=4, deadline=5.0,
+                           max_queue=32, policy="block")
+    ClosedLoopGen(workload, concurrency=8, n=16).drive(sched)
+    outs = sched.result()
+    assert len(outs) == 16
+    assert all(o.batch_size == 4 for o in outs)
+
+
+def test_scheduler_tokens_match_solo_generation(server, workload):
+    """Live scheduling must not change results: batching is composition-
+    independent (masked attention), so tokens equal solo generation even
+    though live batch composition is timing-dependent."""
+    reqs = workload.build(8, rid_base=200)
+    solo = {r.rid: server.generate_batch([r])[0].tokens for r in reqs}
+    sched = AsyncScheduler(server, target_batch=4, deadline=0.005,
+                           max_queue=32, policy="block")
+    for r in reqs:
+        sched.submit(r)
+    outs = sched.result()
+    assert sorted(c.rid for c in outs) == sorted(solo)
+    for c in outs:
+        np.testing.assert_array_equal(solo[c.rid], c.tokens)
+
+
+def test_metrics_breakdown_complete(server, workload):
+    metrics = MetricsCollector()
+    reqs = OpenLoopGen(workload, qps=500.0, n=8, seed=11).requests()
+    server.serve_stream(reqs, target_batch=4, deadline=0.01,
+                        pipeline=True, metrics=metrics)
+    rep = metrics.report(offered_qps=500.0)
+    assert rep.n_completed == 8
+    for part in ("encode", "device", "total"):
+        assert rep.breakdown[part].n == 8
+        assert rep.breakdown[part].p50_ms >= 0.0
+    assert rep.achieved_qps > 0.0
+    d = rep.as_dict()
+    assert set(d["breakdown"]) == {"queue_wait", "encode", "device",
+                                   "drain", "total"}
+
+
+def test_scheduler_config_validation():
+    with pytest.raises(ValueError):
+        SchedulerConfig(policy="drop_everything")
+
+
+def test_device_error_surfaces_instead_of_hanging(server, workload):
+    """A request whose prompt exceeds max_seq kills the device stage; the
+    error must propagate out of result(), not wedge producers on the full
+    handoff queue."""
+    sched = AsyncScheduler(server, target_batch=1, deadline=0.001,
+                           max_queue=16, policy="block")
+    bad = workload.build(1, rid_base=300)[0]
+    bad.tokens = np.ones(server.max_seq + 4, np.int32)   # oversized prompt
+    sched.submit(bad)
+    for r in workload.build(6, rid_base=310):
+        try:
+            sched.submit(r)
+        except RuntimeError:
+            break                    # batcher already saw the worker die
+    with pytest.raises(RuntimeError):
+        sched.result()
+
+
+def test_result_without_submissions_returns_empty(server):
+    sched = AsyncScheduler(server, target_batch=4, deadline=0.01,
+                           max_queue=8)
+    assert sched.result() == []
+
+
+def test_blocked_submitter_fails_fast_on_pipeline_death(server, workload):
+    """policy='block' must not wedge forever when the pipeline dies: the
+    waiter wakes and raises instead of waiting for space that will never
+    free up."""
+    sched = AsyncScheduler(server, target_batch=1, deadline=0.001,
+                           max_queue=2, policy="block")
+    bad = workload.build(1, rid_base=400)[0]
+    bad.tokens = np.ones(server.max_seq + 4, np.int32)   # kills the worker
+    sched.submit(bad)
+    with pytest.raises(RuntimeError):
+        for r in workload.build(8, rid_base=410):
+            sched.submit(r)          # must raise, not hang
+    with pytest.raises(RuntimeError):
+        sched.result()
+
+
+def test_closed_loop_survives_rejections(server, workload):
+    """Rejected/never-completing requests must return their concurrency
+    permit — the drive loop may not wedge under backpressure."""
+    sched = AsyncScheduler(server, target_batch=2, deadline=0.001,
+                           max_queue=2, policy="reject")
+    gen = ClosedLoopGen(workload, concurrency=4, n=12, seed=9)
+    accepted = gen.drive(sched)      # would deadlock on permit leaks
+    outs = sched.result()
+    assert len(outs) == accepted
+    assert accepted + sched.n_rejected == 12
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >=2 devices "
+                           "(XLA_FLAGS=--xla_force_host_platform_device_count=2)")
+def test_multi_device_round_robin_identical(server, workload):
+    """CI matrix job: batches round-robin across host devices and still
+    produce bit-identical completions."""
+    reqs = OpenLoopGen(workload, qps=200.0, n=10, seed=7).requests()
+    sync = server.serve_stream(reqs, target_batch=4, deadline=0.01)
+    multi = server.serve_stream(reqs, target_batch=4, deadline=0.01,
+                                pipeline=True, devices=jax.devices())
+    by_sync = {c.rid: c for c in sync}
+    for c in multi:
+        np.testing.assert_array_equal(by_sync[c.rid].tokens, c.tokens)

@@ -46,6 +46,23 @@ def test_serve_stream_batches_by_deadline(server):
     assert sizes == [2, 4]          # one full batch + one deadline flush
 
 
+def test_context_limit_sets_truncated_flag():
+    """Mixed prompt lengths hitting max_seq: generation stops at the
+    context limit but emits the generated-so-far tokens with an explicit
+    ``truncated`` flag instead of silently shortening the output."""
+    cfg = get_config("llama3.2-3b").reduced()
+    srv = LMServer(cfg, max_seq=8)
+    wants_more = Request(rid=0, tokens=np.asarray([1, 2, 3, 4], np.int32),
+                         max_new_tokens=10)
+    fits = Request(rid=1, tokens=np.asarray([5, 6], np.int32),
+                   max_new_tokens=2)
+    outs = {c.rid: c for c in srv.generate_batch([wants_more, fits])}
+    assert outs[0].truncated
+    assert 0 < len(outs[0].tokens) < 10
+    assert not outs[1].truncated
+    assert len(outs[1].tokens) == 2
+
+
 def test_rule_filter_drops_infeasible():
     cfg = get_config("llama3.2-3b").reduced()
     rs = generate_rules(150, version=2, seed=3)
@@ -65,3 +82,16 @@ def test_rule_filter_drops_infeasible():
                   connect_minutes=[0])
     outs = srv.serve_stream([good, bad], target_batch=2, deadline=0.1)
     assert [o.rid for o in outs] == [0]
+
+    # same pair through the live async scheduler: the filtered request
+    # produces no Completion but must signal on_drop (closed-loop permit
+    # accounting depends on it)
+    from repro.serve import AsyncScheduler
+    dropped = []
+    sched = AsyncScheduler(srv, target_batch=2, deadline=0.1, max_queue=8)
+    sched.on_drop = dropped.append
+    sched.submit(good)
+    sched.submit(bad)
+    outs = sched.result()
+    assert [o.rid for o in outs] == [0]
+    assert dropped == [1]
