@@ -13,12 +13,27 @@ queueing dominates latency and backpressure starts rejecting. Dialing up
 ``SyntheticWorkload`` host work per request (prompt length, MCT queries)
 shifts the bottleneck host-side and the device-idle-fraction climbs.
 
-Emits one CSV row per offered-load point; with ``run.py --json`` the full
-latency breakdown + idle fraction lands in BENCH_endtoend.json.
+The replica sweep (``--replicas``) extends the axis from one accelerator to
+many: N simulated engine replicas (``repro.serve.SimServer`` — wall-clock
+host/device costs, real thread overlap) behind the single admission path.
+Aggregate achieved throughput scales with replica count until the *serial
+host prepare path* saturates — the paper's kernels-per-accelerator axis at
+serving granularity, terminating in the predicted CPU-bound plateau.
+
+Emits one CSV row per offered-load / replica point; with ``run.py --json``
+(or running this file directly) the full latency breakdown + idle fraction
++ per-replica stats land in BENCH_endtoend.json.
 """
 import time
 
-from benchmarks.common import emit
+try:
+    from benchmarks.common import emit
+except ModuleNotFoundError:     # run as a file: benchmarks/fig13_endtoend.py
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.common import emit
 
 # sweep grid: offered load as a multiple of measured capacity
 LOAD_FRACTIONS = (0.25, 0.5, 1.0, 2.0, 4.0)
@@ -29,37 +44,76 @@ MAX_QUEUE = 16
 # and the rejection regime is structurally unreachable
 N_PER_POINT = 64
 
+# replica sweep: host prepare 3 ms/batch (serial, dispatcher thread) vs
+# device execute 8 ms/batch (parallel across replicas) -> ideal scaling to
+# ~2.7 replicas, then the host-bound plateau at 1/3ms = 333 batches/s
+REPLICA_COUNTS = (1, 2, 4)
+SIM_HOST_MS = 3.0
+SIM_DEVICE_MS = 8.0
+SIM_N_BATCHES = 48
+
 
 def _server():
-    from repro.configs.base import get_config
-    from repro.serve import LMServer
-    cfg = get_config("llama3.2-3b").reduced()
-    return LMServer(cfg, max_seq=48)
+    from repro.serve import ServeConfig, build
+    return build(ServeConfig(model="llama3.2-3b", max_seq=48,
+                             target_batch=TARGET_BATCH, deadline=0.01,
+                             max_queue=MAX_QUEUE, policy="reject"))
 
 
-def _capacity_qps(server, workload) -> float:
+def _capacity_qps(srv, workload) -> float:
     """Service rate with full target-sized batches (requests/second)."""
-    server.warmup((1, 2, 4, TARGET_BATCH))   # pre-compile bucket sizes
+    srv.warmup((1, 2, 4, TARGET_BATCH))      # pre-compile bucket sizes
     reqs = workload.build(TARGET_BATCH, rid_base=10_000)
     t0 = time.perf_counter()
-    server.generate_batch(reqs)
+    srv.engine.generate_batch(reqs)
     dt = time.perf_counter() - t0
     return TARGET_BATCH / dt
 
 
-def run():
-    from repro.serve import AsyncScheduler, OpenLoopGen, SyntheticWorkload
+def replica_sweep(replica_counts=REPLICA_COUNTS):
+    """Host-device simulation: aggregate throughput vs replica count."""
+    from repro.serve import ServeConfig, SimServer, build, sim_requests
 
-    server = _server()
-    workload = SyntheticWorkload(vocab=server.cfg.vocab, prompt_len=6,
+    base_qps = None
+    for r in replica_counts:
+        cfg = ServeConfig(
+            replicas=r, routing="least_loaded",
+            target_batch=TARGET_BATCH, deadline=1.0,
+            server_factory=lambda i: SimServer(
+                host_ms_per_batch=SIM_HOST_MS,
+                device_ms_per_batch=SIM_DEVICE_MS))
+        srv = build(cfg)
+        reqs = sim_requests(SIM_N_BATCHES * TARGET_BATCH, max_new_tokens=4)
+        t0 = time.perf_counter()
+        outs = srv.serve(reqs, mode="pipelined")
+        dt = time.perf_counter() - t0
+        qps = len(outs) / dt
+        if base_qps is None:
+            base_qps = qps
+        rep = srv.report()
+        # host-bound when the dispatcher can no longer outrun the replicas:
+        # the serial prepare path caps batch rate at 1/host_ms
+        host_cap_qps = 1e3 / SIM_HOST_MS * TARGET_BATCH
+        emit(f"fig13_replicas_{r}", dt / len(outs) * 1e6,
+             f"replicas={r} achieved={qps:.0f}qps "
+             f"scale={qps / base_qps:.2f}x "
+             f"host_cap={host_cap_qps:.0f}qps "
+             f"idle={rep.device_idle_fraction:.2f}",
+             replicas=r, achieved_qps=qps, scale=qps / base_qps,
+             host_cap_qps=host_cap_qps, report=rep.as_dict())
+
+
+def run():
+    from repro.serve import OpenLoopGen, SyntheticWorkload
+
+    srv = _server()
+    workload = SyntheticWorkload(vocab=srv.engine.cfg.vocab, prompt_len=6,
                                  max_new_tokens=3, seed=1)
-    cap = _capacity_qps(server, workload)
+    cap = _capacity_qps(srv, workload)
 
     for frac in LOAD_FRACTIONS:
         qps = cap * frac
-        sched = AsyncScheduler(server, target_batch=TARGET_BATCH,
-                               deadline=0.01, max_queue=MAX_QUEUE,
-                               policy="reject")
+        sched = srv.session()            # fresh live session per point
         gen = OpenLoopGen(workload, qps=qps, n=N_PER_POINT,
                           seed=int(frac * 100))
         gen.drive(sched)
@@ -77,17 +131,41 @@ def run():
     # overlap win of the async pipeline (fig13 inset)
     reqs = OpenLoopGen(workload, qps=cap, n=24, seed=5).requests()
     t0 = time.perf_counter()
-    server.serve_stream(reqs, target_batch=TARGET_BATCH, deadline=0.01)
+    srv.serve(reqs, mode="sync")
     sync_s = time.perf_counter() - t0
     t0 = time.perf_counter()
-    server.serve_stream(reqs, target_batch=TARGET_BATCH, deadline=0.01,
-                        pipeline=True)
+    srv.serve(reqs, mode="pipelined")
     pipe_s = time.perf_counter() - t0
     emit("fig13_pipeline_overlap", pipe_s * 1e6,
          f"sync={sync_s * 1e3:.0f}ms pipelined={pipe_s * 1e3:.0f}ms "
          f"speedup={sync_s / pipe_s:.2f}x",
          sync_s=sync_s, pipelined_s=pipe_s)
 
+    # replica scaling on top of the same admission path (simulated engines)
+    replica_sweep()
+
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    import json
+
+    from benchmarks import common
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--replicas", nargs="+", type=int, default=None,
+                    metavar="N",
+                    help="run only the replica sweep at these counts "
+                         "(e.g. --replicas 1 2 4)")
+    ap.add_argument("--json", nargs="?", const="BENCH_endtoend.json",
+                    default="BENCH_endtoend.json", metavar="PATH",
+                    help="write structured results (default: "
+                         "BENCH_endtoend.json)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.replicas:
+        replica_sweep(tuple(args.replicas))
+    else:
+        run()
+    with open(args.json, "w") as f:
+        json.dump({"suites": ["fig13"], "failed": [],
+                   "results": common.RESULTS}, f, indent=2)

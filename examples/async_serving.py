@@ -1,34 +1,38 @@
 """ASYNC SUBMISSION PIPELINE DEMO — the paper's §5–6 imbalance, live.
 
-Sweeps open-loop offered load through the AsyncScheduler and prints the
+Built on the unified ``repro.serve`` front end: one ``ServeConfig`` +
+``build()`` stands up the engines, replica group, scheduler wiring, and
+metrics. Sweeps open-loop offered load through live sessions and prints the
 saturation/imbalance curve: below capacity the device idles (the host
 can't form big batches fast enough); past capacity achieved throughput
 flattens, queue wait dominates latency, and backpressure rejects.
 
-Also contrasts the synchronous baseline with the double-buffered pipeline
-on the same request stream, and a closed-loop run that always fills
-target-sized batches.
+Also contrasts the synchronous baseline with the pipelined path on the
+same stream (``Server.serve`` modes — bit-identical outputs), and finishes
+with a sharded-serving sweep: simulated engine replicas behind the same
+admission path, scaling until the serial host prepare path saturates.
 
 Run:  PYTHONPATH=src python examples/async_serving.py
 """
 import time
 
-from repro.configs.base import get_config
-from repro.serve import (AsyncScheduler, ClosedLoopGen, LMServer,
-                         OpenLoopGen, SyntheticWorkload)
+from repro.serve import (OpenLoopGen, ClosedLoopGen, ServeConfig, SimServer,
+                         SyntheticWorkload, build, sim_requests)
 
 
 def main():
-    cfg = get_config("llama3.2-3b").reduced()
-    server = LMServer(cfg, max_seq=48)
-    workload = SyntheticWorkload(vocab=cfg.vocab, prompt_len=6,
+    cfg = ServeConfig(model="llama3.2-3b", max_seq=48,
+                      target_batch=8, deadline=0.01,
+                      max_queue=16, policy="reject")
+    srv = build(cfg)
+    workload = SyntheticWorkload(vocab=srv.engine.cfg.vocab, prompt_len=6,
                                  max_new_tokens=3, seed=1)
 
     # capacity: service rate with full batches (pre-compile bucket sizes)
-    server.warmup((1, 2, 4, 8))
+    srv.warmup((1, 2, 4, 8))
     warm = workload.build(8, rid_base=10_000)
     t0 = time.perf_counter()
-    server.generate_batch(warm)
+    srv.engine.generate_batch(warm)
     cap = 8 / (time.perf_counter() - t0)
     print(f"measured capacity ~{cap:.0f} q/s at batch 8\n")
 
@@ -38,8 +42,7 @@ def main():
         # request count must exceed max_queue plus the ~3 batches the
         # pipeline holds in flight, so overload can actually fill the
         # queue and trigger rejections
-        sched = AsyncScheduler(server, target_batch=8, deadline=0.01,
-                               max_queue=16, policy="reject")
+        sched = srv.session()
         OpenLoopGen(workload, qps=qps, n=64,
                     seed=int(frac * 100)).drive(sched)
         sched.result()
@@ -47,23 +50,35 @@ def main():
         print(f"  {frac:4.2f}x  {rep.summary()}")
 
     print("\nclosed-loop (concurrency 16, always-full batches):")
-    sched = AsyncScheduler(server, target_batch=8, deadline=5.0,
-                           max_queue=64, policy="block")
+    sched = srv.session(policy="block", deadline=5.0, max_queue=64)
     ClosedLoopGen(workload, concurrency=16, n=32).drive(sched)
     outs = sched.result()
     print(f"  batch sizes: {sorted({o.batch_size for o in outs})}, "
           f"{sched.report().summary()}")
 
-    print("\nsync baseline vs double-buffered pipeline (same stream):")
+    print("\nsync baseline vs pipelined (same stream, bit-identical):")
     reqs = OpenLoopGen(workload, qps=cap, n=24, seed=5).requests()
     t0 = time.perf_counter()
-    server.serve_stream(reqs, target_batch=8, deadline=0.01)
+    srv.serve(reqs, mode="sync")
     sync_s = time.perf_counter() - t0
     t0 = time.perf_counter()
-    server.serve_stream(reqs, target_batch=8, deadline=0.01, pipeline=True)
+    srv.serve(reqs, mode="pipelined")
     pipe_s = time.perf_counter() - t0
     print(f"  sync {sync_s * 1e3:.0f} ms -> pipelined {pipe_s * 1e3:.0f} ms "
           f"({sync_s / pipe_s:.2f}x)")
+
+    print("\nsharded serving (simulated replicas, shared admission path):")
+    for r in (1, 2, 4):
+        sim = build(ServeConfig(
+            replicas=r, target_batch=8, deadline=1.0,
+            server_factory=lambda i: SimServer(host_ms_per_batch=3.0,
+                                               device_ms_per_batch=8.0)))
+        sreqs = sim_requests(32 * 8, max_new_tokens=4)
+        t0 = time.perf_counter()
+        outs = sim.serve(sreqs, mode="pipelined")
+        qps = len(outs) / (time.perf_counter() - t0)
+        print(f"  {r} replica(s): {qps:6.0f} q/s  "
+              f"(host-serial cap {1e3 / 3.0 * 8:.0f} q/s)")
     print("done.")
 
 

@@ -13,14 +13,13 @@ import time
 
 import numpy as np
 
-from repro.configs.base import get_config
 from repro.core.aggregator import batch_stats, paper_policy
 from repro.core.compiler import compile_rules
 from repro.core.engine import ErbiumEngine
 from repro.core.rules import generate_rules
 from repro.core.workload import generate_workload, workload_stats
 from repro.core.wrapper import MCTWrapper
-from repro.serve import LMServer, MetricsCollector, Request
+from repro.serve import Request, ServeConfig, build
 
 
 def main():
@@ -53,26 +52,25 @@ def main():
           f"({batch_stats([b for bs in batches_per_uq.values() for b in bs])})"
           f" -> {total_q / mct_s:.0f} q/s end-to-end")
 
-    # route scoring stage: LM server scores surviving routes, host encode
-    # of batch N+1 overlapped with device execution of batch N (the async
-    # submission pipeline; see examples/async_serving.py for the full
-    # offered-load sweep)
-    cfg = get_config("llama3.2-3b").reduced()
-    server = LMServer(cfg, max_seq=64)
-    server.warmup((4,))           # pre-compile the decode step bucket
+    # route scoring stage: LM server scores surviving routes behind the
+    # unified repro.serve front end — host encode of batch N+1 overlapped
+    # with device execution of batch N (see examples/async_serving.py for
+    # the full offered-load and replica sweeps)
+    srv = build(ServeConfig(model="llama3.2-3b", max_seq=64,
+                            target_batch=4, deadline=0.01))
+    srv.warmup((4,))              # pre-compile the decode step bucket
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
-                    tokens=rng.integers(1, cfg.vocab, 8).astype(np.int32),
+                    tokens=rng.integers(1, srv.engine.cfg.vocab,
+                                        8).astype(np.int32),
                     max_new_tokens=4, arrival=i * 0.002)
             for i in range(12)]
-    metrics = MetricsCollector()
-    outs = server.serve_stream(reqs, target_batch=4, deadline=0.01,
-                               pipeline=True, metrics=metrics)
+    outs = srv.serve(reqs, mode="pipelined")
     sizes = [o.batch_size for o in outs]
     print(f"route scoring: {len(outs)} requests served, batch sizes {sizes}")
     print(f"  prefill {np.mean([o.prefill_ms for o in outs]):.1f} ms, "
           f"decode {np.mean([o.decode_ms for o in outs]):.1f} ms (batched)")
-    print(f"  {metrics.report().summary()}")
+    print(f"  {srv.report().summary()}")
     print("done.")
 
 

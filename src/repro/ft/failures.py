@@ -115,3 +115,24 @@ class FailureInjector:
 
     def check(self, step: int) -> Optional[str]:
         return self.schedule.get(step)
+
+
+@dataclass
+class DelayInjector:
+    """Deterministic injected execution delays, keyed by target (host id,
+    serving-replica index, ...): the straggler-side sibling of
+    ``FailureInjector``. ``repro.serve`` replica workers call
+    :meth:`apply` before each device execution, so a delayed replica
+    behaves exactly like a slow accelerator — routing and admission-queue
+    behaviour under stragglers become testable without real slow hardware.
+    """
+    delays: Dict[object, float] = field(default_factory=dict)
+
+    def delay_for(self, target) -> float:
+        return float(self.delays.get(target, 0.0))
+
+    def apply(self, target, sleep=time.sleep) -> float:
+        d = self.delay_for(target)
+        if d > 0:
+            sleep(d)
+        return d

@@ -1,26 +1,53 @@
-"""Serving subsystem: batched LM server + asynchronous submission pipeline.
+"""Serving subsystem: sharded multi-replica serving behind one front end.
 
-- ``engine``    — LMServer (prepare/execute split), Request/Completion
-- ``scheduler`` — AsyncScheduler (bounded admission, backpressure,
-                  double-buffered host/device overlap), run_pipelined
+Preferred API — one config, one call:
+
+    from repro.serve import ServeConfig, build
+    srv = build(ServeConfig(model="llama3.2-3b", replicas=2))
+    srv.serve(requests, mode="pipelined")     # deterministic replay
+    sched = srv.session()                     # live bounded-admission serving
+
+Modules:
+
+- ``server``    — ServeConfig + build() -> Server facade
+- ``engine``    — LMServer (prepare/execute split), Request/Completion,
+                  form_batch_groups (logical-time batch formation)
+- ``group``     — EngineGroup/Replica: one engine replica per device or
+                  mesh slice, least-outstanding-work / sticky routing,
+                  per-replica host-encode/device-execute pipelines
+- ``scheduler`` — AsyncScheduler (bounded admission, BackpressurePolicy
+                  REJECT/SHED_OLDEST/BLOCK), deprecated run_pipelined shim
+- ``sim``       — SimServer: wall-clock host/device cost simulation for
+                  replica-scaling studies without real accelerators
 - ``loadgen``   — open-loop (Poisson) / closed-loop (fixed concurrency)
                   seeded load generators
-- ``metrics``   — per-request latency breakdown, device-idle-fraction
+- ``metrics``   — per-request latency breakdown, device-idle-fraction,
+                  per-replica queue depth / idle / routing counters
 """
 from repro.serve.engine import (Completion, LMServer, PreparedBatch,
-                                Request)
+                                Request, form_batch_groups)
+from repro.serve.group import (EngineGroup, GroupRun, Replica,
+                               RoutingPolicy, batch_work)
 from repro.serve.loadgen import (ClosedLoopGen, OpenLoopGen,
                                  SyntheticWorkload, poisson_arrivals,
                                  uniform_arrivals)
 from repro.serve.metrics import (LatencyStats, MetricsCollector,
-                                 RequestTrace, RunReport)
-from repro.serve.scheduler import (AsyncScheduler, SchedulerConfig,
-                                   run_pipelined)
+                                 ReplicaStats, RequestTrace, RunReport)
+from repro.serve.scheduler import (AsyncScheduler, BackpressurePolicy,
+                                   SchedulerConfig, run_pipelined)
+from repro.serve.server import ServeConfig, Server, build
+from repro.serve.sim import SimServer, sim_requests
 
 __all__ = [
     "Completion", "LMServer", "PreparedBatch", "Request",
+    "form_batch_groups",
+    "EngineGroup", "GroupRun", "Replica", "RoutingPolicy", "batch_work",
     "ClosedLoopGen", "OpenLoopGen", "SyntheticWorkload",
     "poisson_arrivals", "uniform_arrivals",
-    "LatencyStats", "MetricsCollector", "RequestTrace", "RunReport",
-    "AsyncScheduler", "SchedulerConfig", "run_pipelined",
+    "LatencyStats", "MetricsCollector", "ReplicaStats", "RequestTrace",
+    "RunReport",
+    "AsyncScheduler", "BackpressurePolicy", "SchedulerConfig",
+    "run_pipelined",
+    "ServeConfig", "Server", "build",
+    "SimServer", "sim_requests",
 ]

@@ -17,6 +17,7 @@ identify as the deployment's make-or-break.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -61,6 +62,20 @@ class PreparedBatch:
     max_new: int
     mct_encoded: Optional[np.ndarray]     # (Q, C) int32 or None
     mct_owner: List[int] = field(default_factory=list)  # query -> request idx
+
+
+def form_batch_groups(requests: Sequence[Request], *, target_batch: int = 8,
+                      deadline: float = 0.05) -> List[List[Request]]:
+    """Replay an arrival-ordered request stream through the paper's
+    deadline policy; logical time, so batch composition is deterministic
+    for a given stream. Engine-independent: any server implementing the
+    prepare/execute protocol (LMServer, SimServer) can run the groups."""
+    agg = DeadlineAggregator(target_batch=target_batch, deadline=deadline)
+    batches = []
+    for r in sorted(requests, key=lambda x: x.arrival):
+        batches.extend(agg.offer(r.rid, [r], now=r.arrival))
+    batches.extend(agg.flush())
+    return [[q for q in b.queries] for b in batches]
 
 
 class LMServer:
@@ -226,15 +241,9 @@ class LMServer:
                      target_batch: int = 8, deadline: float = 0.05
                      ) -> List[List[Request]]:
         """Replay an arrival-ordered request stream through the paper's
-        deadline policy; logical time, so batch composition is
-        deterministic for a given stream."""
-        agg = DeadlineAggregator(target_batch=target_batch,
+        deadline policy (see module-level :func:`form_batch_groups`)."""
+        return form_batch_groups(requests, target_batch=target_batch,
                                  deadline=deadline)
-        batches = []
-        for r in sorted(requests, key=lambda x: x.arrival):
-            batches.extend(agg.offer(r.rid, [r], now=r.arrival))
-        batches.extend(agg.flush())
-        return [[q for q in b.queries] for b in batches]
 
     def serve_stream(self, requests: Sequence[Request], *,
                      target_batch: int = 8, deadline: float = 0.05,
@@ -245,16 +254,22 @@ class LMServer:
 
         ``pipeline=False`` is the synchronous baseline: prepare and execute
         strictly alternate, the device idles during every host encode.
-        ``pipeline=True`` pushes the same deterministic batch sequence
-        through the double-buffered scheduler pipeline — identical
+        ``pipeline=True`` is deprecated — it delegates to
+        ``EngineGroup.run_groups`` (the implementation behind
+        ``repro.serve.Server.serve(mode="pipelined")``): identical
         completions, overlapped host/device work.
         """
         groups = self.form_batches(requests, target_batch=target_batch,
                                    deadline=deadline)
         if pipeline:
-            from repro.serve.scheduler import run_pipelined
-            return run_pipelined(self, groups, pipeline_depth=pipeline_depth,
-                                 devices=devices, metrics=metrics)
+            warnings.warn(
+                "LMServer.serve_stream(pipeline=True) is deprecated; use "
+                "repro.serve.build(cfg).serve(requests, mode='pipelined')",
+                DeprecationWarning, stacklevel=2)
+            from repro.serve.group import EngineGroup
+            group = EngineGroup.from_server(self, devices=devices)
+            return group.run_groups(groups, pipeline_depth=pipeline_depth,
+                                    metrics=metrics)
         out: List[Completion] = []
         for rs in groups:
             te0 = time.perf_counter()

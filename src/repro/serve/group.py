@@ -1,0 +1,370 @@
+"""Sharded multi-replica serving: one engine replica per device (or mesh
+slice), a single admission path, replica-aware batch routing.
+
+The paper's imbalance finding (§5–6) — a powerful accelerator starved by a
+host that cannot generate enough load — only becomes visible at scale when
+several accelerators share one admission path. ``EngineGroup`` is that
+integration layer: it owns one ``LMServer`` replica per device (or per mesh
+slice via :func:`repro.sharding.specs.replica_device_groups`), and a
+``GroupRun`` gives every replica its own depth-``pipeline_depth``
+host-encode/device-execute pipeline, so host work for replica A overlaps
+device work on replica B. The single dispatcher thread is the deliberately
+serial host path whose saturation produces the CPU-bound plateau the fig13
+replica sweep measures.
+
+Routing (:class:`RoutingPolicy`):
+
+- ``least_loaded`` — route to the replica with the minimum outstanding work
+  (prefill + decode tokens of every batch in its pipeline), round-robin
+  among ties. A slow or stalled replica accumulates outstanding work and
+  stops attracting traffic, so it cannot wedge the shared admission queue.
+- ``sticky``       — batch goes to replica ``min(rid) % n_replicas``:
+  replica assignment depends only on batch content, never on timing, which
+  makes multi-replica runs deterministically replayable (and, since every
+  replica computes the same function, bit-identical to the single-replica
+  synchronous baseline).
+"""
+from __future__ import annotations
+
+import enum
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence
+
+from repro.serve.engine import Completion
+
+
+class RoutingPolicy(str, enum.Enum):
+    """How the dispatcher picks a replica for the next prepared batch."""
+    LEAST_LOADED = "least_loaded"
+    STICKY = "sticky"
+
+    def __str__(self) -> str:            # StrEnum parity on py3.10
+        return self.value
+
+
+ROUTING_POLICIES = tuple(p.value for p in RoutingPolicy)
+
+
+def batch_work(requests) -> int:
+    """Outstanding-work estimate of a batch: prefill tokens plus decode
+    steps. The decode loop runs to the batch max for every row, so decode
+    cost is ``B * max_new``, which is what makes skewed per-request decode
+    lengths matter for routing."""
+    rs = list(requests)
+    if not rs:
+        return 0
+    max_new = max(r.max_new_tokens for r in rs)
+    return sum(len(r.tokens) + max_new for r in rs)
+
+
+@dataclass
+class Replica:
+    """One serving replica: an engine plus the devices it executes on
+    (``None`` = jax default device; several = round-robin within the
+    replica)."""
+    idx: int
+    server: object
+    devices: Optional[Sequence] = None
+
+
+class _ReplicaWorker:
+    """Device half of one replica's pipeline: consumes prepared batches
+    from the replica's own bounded handoff queue, executes them on the
+    replica's device(s), records per-replica busy intervals."""
+
+    def __init__(self, replica: Replica, depth: int, metrics,
+                 on_complete: Optional[Callable[[Completion], None]] = None,
+                 on_drop: Optional[Callable[[int], None]] = None,
+                 clock=time.perf_counter, delay=None,
+                 on_batch_done: Optional[Callable[[int, int], None]] = None):
+        self.replica = replica
+        self.handoff: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
+        self.metrics = metrics
+        self.on_complete = on_complete
+        self.on_drop = on_drop          # rid sinks without a Completion
+        self.clock = clock
+        self.delay = delay              # repro.ft.failures.DelayInjector
+        self.on_batch_done = on_batch_done
+        self.devices = list(replica.devices) if replica.devices else [None]
+        self.completions: List[Completion] = []
+        self.error: Optional[BaseException] = None
+        self._n = 0
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+
+    def start(self):
+        self._thread.start()
+
+    def put(self, pb):
+        # bounded put that stays responsive to worker death: if this
+        # replica's thread died with the queue full, a plain put() would
+        # block the dispatcher forever and bury the error
+        while True:
+            if self.error is not None:
+                raise RuntimeError(
+                    f"replica {self.replica.idx} worker failed") \
+                    from self.error
+            try:
+                self.handoff.put(pb, timeout=0.05)
+                return
+            except queue.Full:
+                continue
+
+    def finish(self) -> List[Completion]:
+        try:
+            self.put(None)
+        except RuntimeError:
+            pass                        # worker already dead; join + raise
+        self._thread.join()
+        if self.error is not None:
+            raise RuntimeError(
+                f"replica {self.replica.idx} worker failed") from self.error
+        return self.completions
+
+    def _loop(self):
+        try:
+            while True:
+                pb = self.handoff.get()
+                if pb is None:
+                    return
+                dev = self.devices[self._n % len(self.devices)]
+                self._n += 1
+                rids = [r.rid for r in pb.requests]
+                t0 = self.clock()
+                if self.delay is not None:
+                    # injected straggler latency counts as device-busy time:
+                    # a slow replica, not a gap in the trace
+                    self.delay.apply(self.replica.idx)
+                comps = self.replica.server.execute_prepared(pb, device=dev)
+                t1 = self.clock()
+                if self.metrics is not None:
+                    self.metrics.on_device(rids, t0, t1,
+                                           replica=self.replica.idx)
+                    self.metrics.on_complete([c.rid for c in comps], t1)
+                self.completions.extend(comps)
+                if self.on_batch_done is not None:
+                    self.on_batch_done(self.replica.idx,
+                                       batch_work(pb.requests))
+                if self.on_complete is not None:
+                    for c in comps:
+                        self.on_complete(c)
+                if self.on_drop is not None:
+                    done = {c.rid for c in comps}
+                    for rid in rids:
+                        if rid not in done:    # MCT filter drop
+                            self.on_drop(rid)
+        except BaseException as e:          # surfaced by put()/finish()
+            self.error = e
+
+
+class GroupRun:
+    """One serving run over an :class:`EngineGroup`: per-replica pipelines
+    plus the routing state. Create via :meth:`EngineGroup.open`; one-shot
+    (dispatch until done, then :meth:`finish`)."""
+
+    def __init__(self, group: "EngineGroup", *, pipeline_depth: int = 2,
+                 metrics=None, clock=time.perf_counter,
+                 on_complete=None, on_drop=None):
+        self.group = group
+        self.metrics = metrics
+        self._workers = [
+            _ReplicaWorker(rep, pipeline_depth, metrics,
+                           on_complete=on_complete, on_drop=on_drop,
+                           clock=clock, delay=group.delay,
+                           on_batch_done=self._on_batch_done)
+            for rep in group.replicas]
+        self._lock = threading.Lock()
+        self._outstanding = [0] * len(self._workers)
+        self._rr = 0
+        self._started = False
+
+    # -- hooks (closed-loop generators chain onto these) ---------------------
+    @property
+    def on_complete(self):
+        return self._workers[0].on_complete
+
+    @on_complete.setter
+    def on_complete(self, cb):
+        for w in self._workers:
+            w.on_complete = cb
+
+    @property
+    def on_drop(self):
+        return self._workers[0].on_drop
+
+    @on_drop.setter
+    def on_drop(self, cb):
+        for w in self._workers:
+            w.on_drop = cb
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        for w in self._workers:
+            if w.error is not None:
+                return w.error
+        return None
+
+    def outstanding(self) -> List[int]:
+        """Per-replica outstanding work units (routing's view)."""
+        with self._lock:
+            return list(self._outstanding)
+
+    def start(self) -> "GroupRun":
+        if not self._started:
+            self._started = True
+            for w in self._workers:
+                w.start()
+        return self
+
+    # -- routing -------------------------------------------------------------
+    def _route(self, pb) -> tuple:
+        """Pick (replica_idx, reason) for a prepared batch."""
+        n = len(self._workers)
+        if n == 1:
+            return 0, "single"
+        if self.group.routing == RoutingPolicy.STICKY:
+            return min(r.rid for r in pb.requests) % n, "sticky"
+        with self._lock:
+            loads = list(self._outstanding)
+        lo = min(loads)
+        cands = [i for i, v in enumerate(loads) if v == lo]
+        if len(cands) == 1:
+            return cands[0], "least_loaded"
+        i = cands[self._rr % len(cands)]
+        self._rr += 1
+        return i, "tie_break"
+
+    def _on_batch_done(self, idx: int, work: int):
+        with self._lock:
+            self._outstanding[idx] -= work
+
+    def dispatch(self, pb) -> int:
+        """Route one prepared batch to a replica pipeline; blocks when that
+        replica's handoff is full (that stall is the backpressure signal
+        the admission queue sees). Returns the chosen replica index."""
+        self.start()
+        idx, reason = self._route(pb)
+        work = batch_work(pb.requests)
+        with self._lock:
+            self._outstanding[idx] += work
+            depth_work = self._outstanding[idx]
+        if self.metrics is not None:
+            self.metrics.on_route(idx, reason)
+        self._workers[idx].put(pb)
+        if self.metrics is not None:
+            self.metrics.note_replica_depth(
+                idx, self._workers[idx].handoff.qsize(), depth_work)
+        return idx
+
+    def finish(self) -> List[Completion]:
+        """Drain every replica pipeline; raises if any replica worker
+        failed. Completions are concatenated in replica order (callers
+        match by rid — cross-replica completion order is not meaningful)."""
+        self.start()
+        out: List[Completion] = []
+        first_err: Optional[BaseException] = None
+        for w in self._workers:
+            try:
+                out.extend(w.finish())
+            except RuntimeError as e:
+                if first_err is None:
+                    first_err = e
+        if first_err is not None:
+            raise first_err
+        return out
+
+
+class EngineGroup:
+    """A replica set plus its routing policy — the sharded-serving
+    counterpart of a single ``LMServer``. Reusable: each :meth:`open` (or
+    :meth:`run_groups`) creates a fresh :class:`GroupRun` with its own
+    per-replica pipelines."""
+
+    def __init__(self, replicas: Sequence[Replica], *,
+                 routing=RoutingPolicy.LEAST_LOADED, delay=None):
+        if not replicas:
+            raise ValueError("EngineGroup needs at least one replica")
+        try:
+            self.routing = RoutingPolicy(routing)
+        except ValueError:
+            raise ValueError(
+                f"routing must be one of {list(ROUTING_POLICIES)}, "
+                f"got {routing!r}") from None
+        self.replicas = list(replicas)
+        self.delay = delay              # optional DelayInjector (tests/sims)
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def from_server(cls, server, *, devices=None, replicas=None,
+                    routing=RoutingPolicy.LEAST_LOADED, delay=None
+                    ) -> "EngineGroup":
+        """Replicas sharing one engine: one per device when ``devices`` is
+        given (each pinned), else ``replicas`` colocated copies (host-device
+        simulation / single-accelerator default)."""
+        if devices:
+            reps = [Replica(i, server, devices=[d])
+                    for i, d in enumerate(devices)]
+        else:
+            reps = [Replica(i, server) for i in range(max(1, replicas or 1))]
+        return cls(reps, routing=routing, delay=delay)
+
+    @classmethod
+    def from_servers(cls, servers: Sequence, *,
+                     routing=RoutingPolicy.LEAST_LOADED, delay=None
+                     ) -> "EngineGroup":
+        """One replica per (distinct) engine — used with simulated engines
+        and with independently-built per-device servers."""
+        return cls([Replica(i, s) for i, s in enumerate(servers)],
+                   routing=routing, delay=delay)
+
+    @classmethod
+    def from_mesh(cls, server, mesh, *, axis: str = "data",
+                  routing=RoutingPolicy.LEAST_LOADED, delay=None
+                  ) -> "EngineGroup":
+        """One replica per slice of ``mesh`` along ``axis`` (see
+        :func:`repro.sharding.specs.replica_device_groups`); the devices of
+        each slice round-robin within the replica."""
+        from repro.sharding.specs import replica_device_groups
+        groups = replica_device_groups(mesh, axis=axis)
+        return cls([Replica(i, server, devices=g)
+                    for i, g in enumerate(groups)],
+                   routing=routing, delay=delay)
+
+    # -- host-side prepare (replica-agnostic) --------------------------------
+    def prepare_batch(self, requests):
+        """Host-encode a batch. Prepare is replica-independent (all
+        replicas serve the same model), so replica 0's engine does it."""
+        return self.replicas[0].server.prepare_batch(requests)
+
+    def open(self, *, pipeline_depth: int = 2, metrics=None,
+             clock=time.perf_counter, on_complete=None,
+             on_drop=None) -> GroupRun:
+        return GroupRun(self, pipeline_depth=pipeline_depth, metrics=metrics,
+                        clock=clock, on_complete=on_complete,
+                        on_drop=on_drop)
+
+    def run_groups(self, groups, *, pipeline_depth: int = 2,
+                   metrics=None) -> List[Completion]:
+        """Execute pre-formed batch groups through per-replica pipelines.
+
+        Batch composition is fixed by the caller and every replica computes
+        the same function, so completions are bit-identical to running the
+        groups synchronously on one replica — only the placement and the
+        host/device overlap differ. This is the single implementation
+        behind ``Server.serve(mode="pipelined")`` and the deprecated
+        ``run_pipelined`` / ``serve_stream(pipeline=True)`` shims.
+        """
+        run = self.open(pipeline_depth=pipeline_depth, metrics=metrics).start()
+        for rs in groups:
+            rs = list(rs)
+            if not rs:
+                continue
+            t0 = time.perf_counter()
+            pb = self.prepare_batch(rs)     # overlaps device execution
+            t1 = time.perf_counter()
+            if metrics is not None:
+                metrics.on_encode([r.rid for r in rs], t0, t1)
+            run.dispatch(pb)
+        return run.finish()

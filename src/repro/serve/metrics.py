@@ -11,7 +11,7 @@ comparable numbers.
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -101,6 +101,26 @@ def _merged_span(intervals: List[Tuple[float, float]]) -> float:
 
 
 @dataclass
+class ReplicaStats:
+    """Per-replica serving statistics (the sharded-serving view: which
+    replicas did the work, how idle each sat, how deep its pipeline ran)."""
+    replica: int
+    n_batches: int
+    n_requests: int
+    busy_s: float
+    idle_fraction: float
+    max_pipeline_depth: int       # prepared batches queued in its handoff
+    max_outstanding_work: int     # routing's work-unit view at dispatch
+
+    def as_dict(self) -> Dict[str, object]:
+        return {"replica": self.replica, "n_batches": self.n_batches,
+                "n_requests": self.n_requests, "busy_s": self.busy_s,
+                "idle_fraction": self.idle_fraction,
+                "max_pipeline_depth": self.max_pipeline_depth,
+                "max_outstanding_work": self.max_outstanding_work}
+
+
+@dataclass
 class RunReport:
     n_requests: int
     n_completed: int
@@ -114,6 +134,8 @@ class RunReport:
     max_queue_depth: int
     batch_sizes: List[int]
     breakdown: Dict[str, LatencyStats]
+    per_replica: Dict[int, ReplicaStats] = field(default_factory=dict)
+    routing: Dict[str, int] = field(default_factory=dict)
 
     def as_dict(self) -> Dict[str, object]:
         return {
@@ -130,6 +152,9 @@ class RunReport:
             "mean_batch": float(np.mean(self.batch_sizes))
             if self.batch_sizes else 0.0,
             "breakdown": {k: v.as_dict() for k, v in self.breakdown.items()},
+            "per_replica": {k: v.as_dict()
+                            for k, v in sorted(self.per_replica.items())},
+            "routing": dict(self.routing),
         }
 
     def summary(self) -> str:
@@ -140,6 +165,8 @@ class RunReport:
                 + (f" of offered {self.offered_qps:.1f}"
                    if self.offered_qps else "")
                 + f", device idle {self.device_idle_fraction * 100:.0f}%"
+                + (f" over {len(self.per_replica)} replicas"
+                   if len(self.per_replica) > 1 else "")
                 + (f", p50/p95/p99 {t.p50_ms:.0f}/{t.p95_ms:.0f}/"
                    f"{t.p99_ms:.0f} ms" if t and t.n else ""))
 
@@ -153,6 +180,14 @@ class MetricsCollector:
         self._device_busy: List[Tuple[float, float]] = []
         self._batch_sizes: List[int] = []
         self.max_queue_depth = 0
+        # sharded-serving state: per-replica busy intervals / load counters
+        # and routing-decision counts (reason -> n)
+        self._replica_busy: Dict[int, List[Tuple[float, float]]] = {}
+        self._replica_batches: Dict[int, int] = {}
+        self._replica_requests: Dict[int, int] = {}
+        self._replica_max_depth: Dict[int, int] = {}
+        self._replica_max_work: Dict[int, int] = {}
+        self._routing: Dict[str, int] = {}
 
     def _t(self, rid: int) -> RequestTrace:
         tr = self._traces.get(rid)
@@ -191,10 +226,17 @@ class MetricsCollector:
                 if tr.arrival is None:
                     tr.arrival = t0
 
-    def on_device(self, rids: List[int], t0: float, t1: float):
+    def on_device(self, rids: List[int], t0: float, t1: float,
+                  replica: Optional[int] = None):
         with self._lock:
             self._device_busy.append((t0, t1))
             self._batch_sizes.append(len(rids))
+            if replica is not None:
+                self._replica_busy.setdefault(replica, []).append((t0, t1))
+                self._replica_batches[replica] = \
+                    self._replica_batches.get(replica, 0) + 1
+                self._replica_requests[replica] = \
+                    self._replica_requests.get(replica, 0) + len(rids)
             for rid in rids:
                 tr = self._t(rid)
                 tr.device_start, tr.device_end = t0, t1
@@ -209,6 +251,26 @@ class MetricsCollector:
             if depth > self.max_queue_depth:
                 self.max_queue_depth = depth
 
+    def note_replica_depth(self, replica: int, pipeline_depth: int,
+                           outstanding_work: int):
+        """Routing-time snapshot of one replica's pipeline: queued prepared
+        batches and outstanding work units."""
+        with self._lock:
+            if pipeline_depth > self._replica_max_depth.get(replica, 0):
+                self._replica_max_depth[replica] = pipeline_depth
+            if outstanding_work > self._replica_max_work.get(replica, 0):
+                self._replica_max_work[replica] = outstanding_work
+
+    def on_route(self, replica: int, reason: str):
+        """One routing decision: ``reason`` is the router's justification
+        (single / sticky / least_loaded / tie_break)."""
+        with self._lock:
+            self._routing[reason] = self._routing.get(reason, 0) + 1
+            # replicas that never execute (all work routed away) must still
+            # appear in the per-replica report
+            self._replica_batches.setdefault(replica, 0)
+            self._replica_requests.setdefault(replica, 0)
+
     # -- aggregation ---------------------------------------------------------
     def report(self, *, offered_qps: Optional[float] = None) -> RunReport:
         with self._lock:
@@ -216,6 +278,12 @@ class MetricsCollector:
             busy = list(self._device_busy)
             batch_sizes = list(self._batch_sizes)
             max_depth = self.max_queue_depth
+            replica_busy = {k: list(v) for k, v in self._replica_busy.items()}
+            replica_batches = dict(self._replica_batches)
+            replica_requests = dict(self._replica_requests)
+            replica_max_depth = dict(self._replica_max_depth)
+            replica_max_work = dict(self._replica_max_work)
+            routing = dict(self._routing)
         done = [t for t in traces if t.completed is not None]
         starts = [t.arrival for t in traces if t.arrival is not None]
         ends = [t.completed for t in done]
@@ -235,6 +303,19 @@ class MetricsCollector:
             "total": LatencyStats.of(
                 [t.total_ms for t in done if t.total_ms is not None]),
         }
+        per_replica = {}
+        for k in sorted(set(replica_batches) | set(replica_busy)):
+            rb = _merged_span(replica_busy.get(k, []))
+            ridle = 1.0 - rb / span if span > 0 else 0.0
+            per_replica[k] = ReplicaStats(
+                replica=k,
+                n_batches=replica_batches.get(k, 0),
+                n_requests=replica_requests.get(k, 0),
+                busy_s=rb,
+                idle_fraction=max(0.0, min(1.0, ridle)),
+                max_pipeline_depth=replica_max_depth.get(k, 0),
+                max_outstanding_work=replica_max_work.get(k, 0),
+            )
         return RunReport(
             n_requests=len(traces),
             n_completed=len(done),
@@ -248,4 +329,6 @@ class MetricsCollector:
             max_queue_depth=max_depth,
             batch_sizes=batch_sizes,
             breakdown=breakdown,
+            per_replica=per_replica,
+            routing=routing,
         )

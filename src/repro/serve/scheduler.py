@@ -7,40 +7,56 @@ too slowly, the CPU saturates first, and end-to-end the system gets slower
 
     submit() --bounded queue / backpressure--> [batcher thread]
         host prepare (token matrix + MCT encode, numpy)
-              --depth-k handoff--> [device thread]
-        rule match + decode loop on the accelerator
+              --replica routing--> [per-replica device threads]
+        rule match + decode loop on the accelerator(s)
 
-The handoff queue holds ``pipeline_depth`` prepared batches (2 = classic
-double buffering): host-side encode of batch N+1 overlaps device execution
-of batch N; ``jax.block_until_ready`` inside the device stage marks the
-true device-busy interval for the idle-fraction metric.
+The batcher routes each prepared batch to one replica of an
+:class:`~repro.serve.group.EngineGroup` (least-outstanding-work by default,
+``sticky`` for deterministic replay). Every replica keeps its own
+depth-``pipeline_depth`` handoff queue (2 = classic double buffering), so
+host-side encode of batch N+1 overlaps device execution of batch N — and
+with several replicas, host work for one replica overlaps device work on
+the others. ``jax.block_until_ready`` inside the device stage marks the
+true device-busy interval for the per-replica idle-fraction metric.
 
-Backpressure policies when the admission queue (pending + aggregator
-buffer) is at ``max_queue``:
+Backpressure policies (:class:`BackpressurePolicy`) when the admission
+queue (pending + aggregator buffer) is at ``max_queue``:
 
-- ``reject``      — refuse the new request (submit returns False)
-- ``shed_oldest`` — evict the oldest queued request, admit the new one
-- ``block``       — make the submitter wait (closed-loop behaviour)
+- ``REJECT``      — refuse the new request (submit returns False)
+- ``SHED_OLDEST`` — evict the oldest queued request, admit the new one
+- ``BLOCK``       — make the submitter wait (closed-loop behaviour)
 
-``run_pipelined`` is the deterministic sibling: it takes pre-formed batch
-groups (logical-time aggregation, see ``LMServer.form_batches``) and pushes
-them through the same two-stage pipeline — bit-identical completions to the
-synchronous baseline, overlapped host/device work.
+``run_pipelined`` is a deprecated shim over
+:meth:`EngineGroup.run_groups` — prefer ``repro.serve.build(cfg).serve()``.
 """
 from __future__ import annotations
 
-import queue
+import enum
 import threading
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Union
 
 from repro.core.aggregator import DeadlineAggregator
 from repro.serve.engine import Completion, LMServer, Request
+from repro.serve.group import EngineGroup, RoutingPolicy
 from repro.serve.metrics import MetricsCollector
 
-POLICIES = ("reject", "shed_oldest", "block")
+
+class BackpressurePolicy(str, enum.Enum):
+    """What happens to a new request when the admission queue is full."""
+    REJECT = "reject"
+    SHED_OLDEST = "shed_oldest"
+    BLOCK = "block"
+
+    def __str__(self) -> str:            # StrEnum parity on py3.10
+        return self.value
+
+
+# legacy tuple kept for callers that introspected the valid policy strings
+POLICIES = tuple(p.value for p in BackpressurePolicy)
 
 
 @dataclass
@@ -48,128 +64,66 @@ class SchedulerConfig:
     target_batch: int = 8
     deadline: float = 0.05          # seconds a request may wait for peers
     max_queue: int = 64             # bounded admission depth (requests)
-    policy: str = "reject"
-    pipeline_depth: int = 2         # prepared batches in flight (2 = double
-                                    # buffering)
-    devices: Optional[Sequence] = None  # round-robin device placement
+    policy: Union[str, BackpressurePolicy] = BackpressurePolicy.REJECT
+    pipeline_depth: int = 2         # prepared batches in flight per replica
+                                    # (2 = double buffering)
+    devices: Optional[Sequence] = None  # one replica per device
+    replicas: Optional[int] = None      # colocated replicas (simulation)
+    routing: Union[str, RoutingPolicy] = RoutingPolicy.LEAST_LOADED
 
     def __post_init__(self):
-        if self.policy not in POLICIES:
-            raise ValueError(f"policy must be one of {POLICIES}")
-
-
-class _DeviceWorker:
-    """Consumes prepared batches from the handoff queue, executes them on
-    the device (round-robin when several), records busy intervals."""
-
-    def __init__(self, server: LMServer, depth: int, metrics,
-                 on_complete: Optional[Callable[[Completion], None]] = None,
-                 on_drop: Optional[Callable[[int], None]] = None,
-                 devices=None, clock=time.perf_counter):
-        self.server = server
-        self.handoff: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
-        self.metrics = metrics
-        self.on_complete = on_complete
-        self.on_drop = on_drop          # rid sinks without a Completion
-        self.devices = list(devices) if devices else [None]
-        self.clock = clock
-        self.completions: List[Completion] = []
-        self.error: Optional[BaseException] = None
-        self._n = 0
-        self._thread = threading.Thread(target=self._loop, daemon=True)
-
-    def start(self):
-        self._thread.start()
-
-    def put(self, pb):
-        # bounded put that stays responsive to worker death: if the device
-        # thread died with the queue full, a plain put() would block every
-        # producer forever and bury the error
-        while True:
-            if self.error is not None:
-                raise RuntimeError("device worker failed") from self.error
-            try:
-                self.handoff.put(pb, timeout=0.05)
-                return
-            except queue.Full:
-                continue
-
-    def finish(self) -> List[Completion]:
         try:
-            self.put(None)
-        except RuntimeError:
-            pass                        # worker already dead; join + raise
-        self._thread.join()
-        if self.error is not None:
-            raise RuntimeError("device worker failed") from self.error
-        return self.completions
-
-    def _loop(self):
+            self.policy = BackpressurePolicy(self.policy)
+        except ValueError:
+            raise ValueError(
+                f"policy must be one of {list(POLICIES)}, "
+                f"got {self.policy!r}") from None
         try:
-            while True:
-                pb = self.handoff.get()
-                if pb is None:
-                    return
-                dev = self.devices[self._n % len(self.devices)]
-                self._n += 1
-                rids = [r.rid for r in pb.requests]
-                t0 = self.clock()
-                comps = self.server.execute_prepared(pb, device=dev)
-                t1 = self.clock()
-                if self.metrics is not None:
-                    self.metrics.on_device(rids, t0, t1)
-                    self.metrics.on_complete([c.rid for c in comps], t1)
-                self.completions.extend(comps)
-                if self.on_complete is not None:
-                    for c in comps:
-                        self.on_complete(c)
-                if self.on_drop is not None:
-                    done = {c.rid for c in comps}
-                    for rid in rids:
-                        if rid not in done:    # MCT filter drop
-                            self.on_drop(rid)
-        except BaseException as e:          # surfaced by put()/finish()
-            self.error = e
+            self.routing = RoutingPolicy(self.routing)
+        except ValueError:
+            raise ValueError(
+                "routing must be one of "
+                f"{[p.value for p in RoutingPolicy]}, "
+                f"got {self.routing!r}") from None
 
 
-def run_pipelined(server: LMServer, groups: Sequence[Sequence[Request]], *,
+def run_pipelined(server, groups: Sequence[Sequence[Request]], *,
                   pipeline_depth: int = 2, devices=None,
                   metrics: Optional[MetricsCollector] = None
                   ) -> List[Completion]:
-    """Execute pre-formed batches through the two-stage pipeline.
+    """Deprecated: use ``repro.serve.build(cfg).serve(requests,
+    mode="pipelined")`` or :meth:`EngineGroup.run_groups`.
 
-    Batch composition is fixed by the caller (deterministic), so the result
-    is bit-identical to running the groups synchronously — only the
-    host/device overlap differs.
+    Executes pre-formed batches through the per-replica pipelines; batch
+    composition is fixed by the caller, so the result is bit-identical to
+    running the groups synchronously — only the host/device overlap
+    differs.
     """
-    worker = _DeviceWorker(server, pipeline_depth, metrics, devices=devices)
-    worker.start()
-    for rs in groups:
-        rs = list(rs)
-        if not rs:
-            continue
-        t0 = time.perf_counter()
-        pb = server.prepare_batch(rs)       # overlaps device execution
-        t1 = time.perf_counter()
-        if metrics is not None:
-            metrics.on_encode([r.rid for r in rs], t0, t1)
-        worker.put(pb)
-    return worker.finish()
+    warnings.warn(
+        "run_pipelined is deprecated; use repro.serve.build(cfg)"
+        ".serve(requests, mode='pipelined') or EngineGroup.run_groups",
+        DeprecationWarning, stacklevel=2)
+    group = server if isinstance(server, EngineGroup) \
+        else EngineGroup.from_server(server, devices=devices)
+    return group.run_groups(groups, pipeline_depth=pipeline_depth,
+                            metrics=metrics)
 
 
 class AsyncScheduler:
     """Live continuous-batching front end with bounded admission.
 
-    Thread layout: submitters call :meth:`submit`; a batcher thread drains
-    the admission queue through a :class:`DeadlineAggregator` (wall-clock
-    deadline), host-prepares one batch at a time, and hands it to the
-    device worker through the depth-``pipeline_depth`` queue. Draining one
+    Accepts a single ``LMServer`` (wrapped into a one-replica
+    :class:`EngineGroup`; ``devices``/``replicas`` in the config expand it)
+    or an ``EngineGroup`` built explicitly. Thread layout: submitters call
+    :meth:`submit`; a batcher thread drains the admission queue through a
+    :class:`DeadlineAggregator` (wall-clock deadline), host-prepares one
+    batch at a time, and routes it to a replica pipeline. Draining one
     batch per poll is what makes backpressure real — overload accumulates
     in the *bounded* admission queue instead of an unbounded internal
     buffer.
     """
 
-    def __init__(self, server: LMServer,
+    def __init__(self, server: Union[LMServer, EngineGroup],
                  config: Optional[SchedulerConfig] = None, *,
                  metrics: Optional[MetricsCollector] = None,
                  on_complete: Optional[Callable[[Completion], None]] = None,
@@ -179,7 +133,14 @@ class AsyncScheduler:
         elif overrides:
             raise ValueError("pass either config or keyword overrides")
         self.cfg = config
-        self.server = server
+        if isinstance(server, EngineGroup):
+            self.group = server         # config.routing/devices ignored:
+                                        # the group already encodes them
+        else:
+            self.group = EngineGroup.from_server(
+                server, devices=config.devices, replicas=config.replicas,
+                routing=config.routing)
+        self.server = self.group.replicas[0].server
         self.metrics = metrics if metrics is not None else MetricsCollector()
         self._epoch = time.perf_counter()
         self._lock = threading.Lock()
@@ -192,10 +153,10 @@ class AsyncScheduler:
         self.n_submitted = 0
         self.n_rejected = 0
         self.n_shed = 0
-        self._worker = _DeviceWorker(server, config.pipeline_depth,
-                                     self.metrics, on_complete=on_complete,
-                                     devices=config.devices,
-                                     clock=self._now)
+        self._run = self.group.open(pipeline_depth=config.pipeline_depth,
+                                    metrics=self.metrics,
+                                    clock=self._now,
+                                    on_complete=on_complete)
         self._batcher = threading.Thread(target=self._batch_loop, daemon=True)
         self._batcher_error: Optional[BaseException] = None
         self._started = False
@@ -208,19 +169,19 @@ class AsyncScheduler:
     # completion/drop hooks (closed-loop generators chain onto these)
     @property
     def on_complete(self):
-        return self._worker.on_complete
+        return self._run.on_complete
 
     @on_complete.setter
     def on_complete(self, cb):
-        self._worker.on_complete = cb
+        self._run.on_complete = cb
 
     @property
     def on_drop(self):
-        return self._worker.on_drop
+        return self._run.on_drop
 
     @on_drop.setter
     def on_drop(self, cb):
-        self._worker.on_drop = cb
+        self._run.on_drop = cb
 
     # -- public API ------------------------------------------------------------
     def start(self) -> "AsyncScheduler":
@@ -228,7 +189,7 @@ class AsyncScheduler:
             if self._started:
                 return self
             self._started = True
-        self._worker.start()
+        self._run.start()
         self._batcher.start()
         return self
 
@@ -237,7 +198,7 @@ class AsyncScheduler:
 
     def _pipeline_dead(self) -> bool:
         return self._batcher_error is not None \
-            or self._worker.error is not None
+            or self._run.error is not None
 
     @property
     def queue_depth(self) -> int:
@@ -252,7 +213,7 @@ class AsyncScheduler:
         with self._lock:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
-            if self.cfg.policy == "block":
+            if self.cfg.policy == BackpressurePolicy.BLOCK:
                 while self._depth_locked() >= self.cfg.max_queue \
                         and not self._closed and not self._pipeline_dead():
                     self._space.wait(timeout=0.1)
@@ -268,7 +229,7 @@ class AsyncScheduler:
                     raise RuntimeError("scheduler pipeline failed; "
                                        "call result() for the cause")
             elif self._depth_locked() >= self.cfg.max_queue:
-                if self.cfg.policy == "reject":
+                if self.cfg.policy == BackpressurePolicy.REJECT:
                     self.n_rejected += 1
                     self.metrics.on_reject(req.rid, now)
                     return False
@@ -294,8 +255,8 @@ class AsyncScheduler:
         # user callback outside the non-reentrant lock: an on_drop that
         # reads queue_depth or re-submits must not deadlock (the device
         # thread already calls it unlocked — same contract)
-        if shed_rid is not None and self._worker.on_drop is not None:
-            self._worker.on_drop(shed_rid)
+        if shed_rid is not None and self._run.on_drop is not None:
+            self._run.on_drop(shed_rid)
         return True
 
     def close(self):
@@ -307,14 +268,15 @@ class AsyncScheduler:
 
     def result(self) -> List[Completion]:
         """close() if needed, wait for the pipeline to drain, and return
-        all completions (in execution order)."""
+        all completions (matched by rid; cross-replica order is not
+        meaningful)."""
         if self._results is not None:
             return self._results
         if not self._started:
             self.start()       # zero submissions: drain cleanly to []
         self.close()
         self._batcher.join()
-        completions = self._worker.finish()     # raises on device error
+        completions = self._run.finish()        # raises on replica error
         if self._batcher_error is not None:
             raise RuntimeError("batcher thread failed") \
                 from self._batcher_error
@@ -365,13 +327,13 @@ class AsyncScheduler:
                 if rs is None:
                     return
                 t0 = self._now()
-                pb = self.server.prepare_batch(rs)
+                pb = self.group.prepare_batch(rs)
                 t1 = self._now()
                 self.metrics.on_encode([r.rid for r in rs], t0, t1)
-                # blocks while `pipeline_depth` batches are already in
-                # flight — that stall is what pushes overload back onto
-                # the bounded admission queue
-                self._worker.put(pb)
+                # blocks while the routed replica already has
+                # `pipeline_depth` batches in flight — that stall is what
+                # pushes overload back onto the bounded admission queue
+                self._run.dispatch(pb)
         except BaseException as e:          # surfaced by result()
             self._batcher_error = e
             with self._lock:

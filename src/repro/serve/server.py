@@ -1,0 +1,232 @@
+"""Unified serving front end: ``ServeConfig`` + ``build()`` -> ``Server``.
+
+One dataclass describes the whole serving stack — model, replica topology,
+batching, admission control — and one call wires it:
+
+    from repro.serve import ServeConfig, build
+
+    srv = build(ServeConfig(model="llama3.2-3b", max_seq=48,
+                            replicas=2, target_batch=8, deadline=0.01))
+    outs = srv.serve(requests, mode="pipelined")     # deterministic replay
+    sched = srv.session()                            # live async serving
+    sched.submit(req); ...; sched.result()
+
+This replaces the previous four-object hand-wiring (``LMServer`` +
+``AsyncScheduler`` + ``MetricsCollector`` + ``run_pipelined``); the old
+entry points still work behind ``DeprecationWarning`` shims.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Union
+
+from repro.serve.engine import (Completion, LMServer, Request,
+                                form_batch_groups)
+from repro.serve.group import EngineGroup, RoutingPolicy
+from repro.serve.metrics import MetricsCollector, RunReport
+from repro.serve.scheduler import (AsyncScheduler, BackpressurePolicy,
+                                   SchedulerConfig)
+
+
+@dataclass
+class ServeConfig:
+    """Everything needed to stand up a (possibly sharded) serving stack.
+
+    Model / engine:
+      ``model``       — architecture id (``repro.configs``) or a
+                        ``ModelConfig`` instance.
+      ``reduced``     — apply ``ModelConfig.reduced()`` (CPU-sized) first.
+      ``server_factory`` — optional ``idx -> engine`` override; when set,
+                        ``model``/``max_seq``/... are ignored and one
+                        engine is built per replica (simulation, tests).
+
+    Replica topology (first non-default wins: mesh > devices > replicas):
+      ``mesh``/``mesh_axis`` — one replica per mesh slice along the axis
+                        (see ``repro.sharding.specs.replica_device_groups``).
+      ``devices``     — one replica pinned per listed jax device.
+      ``replicas``    — N colocated replicas sharing the default device.
+      ``routing``     — ``least_loaded`` (default) or ``sticky``.
+      ``delay``       — optional ``repro.ft.failures.DelayInjector`` applied
+                        per replica (straggler studies).
+
+    Batching / admission (the AsyncScheduler knobs):
+      ``target_batch``, ``deadline``, ``max_queue``, ``policy``
+      (:class:`BackpressurePolicy` or its string value), ``pipeline_depth``.
+    """
+    model: Union[str, object] = "llama3.2-3b"
+    reduced: bool = True
+    max_seq: int = 64
+    seed: int = 0
+    rule_filter: object = None
+    pad_batches: bool = True
+    server_factory: Optional[Callable[[int], object]] = None
+    # replica topology
+    replicas: int = 1
+    devices: Optional[Sequence] = None
+    mesh: object = None
+    mesh_axis: str = "data"
+    routing: Union[str, RoutingPolicy] = RoutingPolicy.LEAST_LOADED
+    delay: object = None
+    # batching / admission
+    target_batch: int = 8
+    deadline: float = 0.05
+    max_queue: int = 64
+    policy: Union[str, BackpressurePolicy] = BackpressurePolicy.REJECT
+    pipeline_depth: int = 2
+
+    def scheduler_config(self, **overrides) -> SchedulerConfig:
+        base = dict(target_batch=self.target_batch, deadline=self.deadline,
+                    max_queue=self.max_queue, policy=self.policy,
+                    pipeline_depth=self.pipeline_depth,
+                    routing=self.routing)
+        base.update(overrides)
+        return SchedulerConfig(**base)
+
+
+class Server:
+    """Facade over an :class:`EngineGroup`: deterministic stream serving
+    (:meth:`serve`) and live async sessions (:meth:`session`/:meth:`submit`)
+    share the replicas, the routing policy, and one ``MetricsCollector``."""
+
+    def __init__(self, group: EngineGroup, cfg: ServeConfig,
+                 metrics: Optional[MetricsCollector] = None):
+        self.group = group
+        self.cfg = cfg
+        self.metrics = metrics if metrics is not None else MetricsCollector()
+        self._session: Optional[AsyncScheduler] = None
+
+    # -- engine access --------------------------------------------------------
+    @property
+    def engine(self):
+        """Replica 0's engine (capacity probes, direct generate_batch)."""
+        return self.group.replicas[0].server
+
+    @property
+    def engines(self) -> List[object]:
+        """Distinct engines across replicas (shared engines deduplicated)."""
+        seen, out = set(), []
+        for rep in self.group.replicas:
+            if id(rep.server) not in seen:
+                seen.add(id(rep.server))
+                out.append(rep.server)
+        return out
+
+    def warmup(self, batch_sizes: Sequence[int] = (1, 8), **kw) -> None:
+        """Pre-compile decode buckets on every distinct engine (no-op for
+        engines without a ``warmup``, e.g. ``SimServer``)."""
+        for eng in self.engines:
+            fn = getattr(eng, "warmup", None)
+            if fn is not None:
+                fn(batch_sizes, **kw)
+
+    # -- deterministic stream serving -----------------------------------------
+    def serve(self, requests: Sequence[Request], *,
+              mode: str = "pipelined") -> List[Completion]:
+        """Serve an arrival-ordered request stream, deterministically.
+
+        Batch composition is fixed by logical-time replay of the paper's
+        deadline policy (``form_batch_groups``), so both modes run the
+        exact same batch sequence:
+
+        - ``mode="sync"``      — the baseline: prepare and execute strictly
+          alternate on replica 0; the device idles during every host
+          encode.
+        - ``mode="pipelined"`` — batches are routed across all replicas,
+          each with its own depth-``pipeline_depth`` host/device pipeline.
+
+        **Bit-identity guarantee:** every replica serves the same model
+        (same params), rows of a batch are independent (masked attention,
+        power-of-two padding), and batch composition does not depend on
+        wall-clock timing — so for any replica count and either routing
+        policy (use ``sticky`` when the *placement* must also replay
+        deterministically), ``mode="pipelined"`` returns completions
+        bit-identical to ``mode="sync"``. Only throughput differs.
+
+        This method subsumes the deprecated ``run_pipelined(...)`` and
+        ``LMServer.serve_stream(pipeline=True)`` entry points.
+        """
+        groups = form_batch_groups(requests,
+                                   target_batch=self.cfg.target_batch,
+                                   deadline=self.cfg.deadline)
+        if mode == "pipelined":
+            return self.group.run_groups(
+                groups, pipeline_depth=self.cfg.pipeline_depth,
+                metrics=self.metrics)
+        if mode == "sync":
+            eng = self.engine
+            out: List[Completion] = []
+            for rs in groups:
+                te0 = time.perf_counter()
+                pb = eng.prepare_batch(rs)
+                te1 = time.perf_counter()
+                comps = eng.execute_prepared(pb)
+                td1 = time.perf_counter()
+                rids = [r.rid for r in rs]
+                self.metrics.on_encode(rids, te0, te1)
+                self.metrics.on_device(rids, te1, td1, replica=0)
+                self.metrics.on_complete([c.rid for c in comps], td1)
+                out.extend(comps)
+            return out
+        raise ValueError(
+            f"mode must be 'pipelined' or 'sync', got {mode!r}")
+
+    # -- live async serving ----------------------------------------------------
+    def session(self, *, metrics: Optional[MetricsCollector] = None,
+                **overrides) -> AsyncScheduler:
+        """A fresh live serving session (bounded admission + backpressure)
+        over the shared replicas. ``overrides`` patch the scheduler knobs
+        for this session only (e.g. ``policy="block"``)."""
+        return AsyncScheduler(
+            self.group, self.cfg.scheduler_config(**overrides),
+            metrics=metrics if metrics is not None else MetricsCollector())
+
+    def submit(self, req: Request, **kw) -> bool:
+        """Submit to the server's default live session (created lazily,
+        sharing ``self.metrics``); drain with :meth:`result`."""
+        if self._session is None:
+            self._session = AsyncScheduler(
+                self.group, self.cfg.scheduler_config(),
+                metrics=self.metrics)
+        return self._session.submit(req, **kw)
+
+    def result(self) -> List[Completion]:
+        if self._session is None:
+            return []
+        out = self._session.result()
+        self._session = None        # sessions are one-shot; allow another
+        return out
+
+    def report(self, *, offered_qps: Optional[float] = None) -> RunReport:
+        return self.metrics.report(offered_qps=offered_qps)
+
+
+def build(cfg: ServeConfig) -> Server:
+    """Construct the full serving stack from one config: engines (or take
+    them from ``cfg.server_factory``), the replica :class:`EngineGroup`,
+    and the shared :class:`MetricsCollector` — replacing the previous
+    ``LMServer``/``AsyncScheduler``/``MetricsCollector``/``run_pipelined``
+    hand-wiring."""
+    if cfg.server_factory is not None:
+        servers = [cfg.server_factory(i) for i in range(max(1, cfg.replicas))]
+        group = EngineGroup.from_servers(servers, routing=cfg.routing,
+                                         delay=cfg.delay)
+        return Server(group, cfg)
+
+    model = cfg.model
+    if isinstance(model, str):
+        from repro.configs.base import get_config
+        model = get_config(model)
+    if cfg.reduced:
+        model = model.reduced()
+    server = LMServer(model, max_seq=cfg.max_seq, seed=cfg.seed,
+                      rule_filter=cfg.rule_filter,
+                      pad_batches=cfg.pad_batches)
+    if cfg.mesh is not None:
+        group = EngineGroup.from_mesh(server, cfg.mesh, axis=cfg.mesh_axis,
+                                      routing=cfg.routing, delay=cfg.delay)
+    else:
+        group = EngineGroup.from_server(server, devices=cfg.devices,
+                                        replicas=cfg.replicas,
+                                        routing=cfg.routing, delay=cfg.delay)
+    return Server(group, cfg)

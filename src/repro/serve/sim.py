@@ -1,0 +1,105 @@
+"""Simulated serving engine for host-device balance studies.
+
+``SimServer`` implements the same prepare/execute protocol as ``LMServer``
+but spends *wall-clock sleep* instead of FLOPs: host prepare costs
+``host_ms_per_batch + host_ms_per_request * B`` on the calling (dispatcher)
+thread, device execute costs ``device_ms_per_batch + device_ms_per_token *
+B * max_new`` on the replica worker thread. Sleeps release the GIL, so
+replica pipelines genuinely overlap — which is the point: with R replicas
+behind one admission path, aggregate throughput scales with R until the
+*serial host prepare path* saturates, and the CPU-bound plateau the paper
+predicts (§5–6) emerges from real thread timing, not from arithmetic.
+
+Used by ``benchmarks/fig13_endtoend.py --replicas`` (host-device
+simulation sweep) and the replica-routing tests, where real accelerators
+per replica aren't available in the container.
+
+Outputs are deterministic functions of the request (rid + position), so
+bit-identity checks work across replica counts and routing policies.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.engine import Completion, Request
+
+
+@dataclass
+class SimPreparedBatch:
+    """Host-side half of a simulated batch (mirrors ``PreparedBatch`` in
+    the fields the pipeline layer touches)."""
+    requests: List[Request]
+    max_new: int
+
+
+@dataclass
+class SimServer:
+    """LMServer-compatible engine with dialable host/device costs."""
+    vocab: int = 256
+    host_ms_per_batch: float = 1.0
+    host_ms_per_request: float = 0.0
+    device_ms_per_batch: float = 4.0
+    device_ms_per_token: float = 0.0
+    sleep: object = field(default=time.sleep, repr=False)
+
+    # -- host-side prepare stage --------------------------------------------
+    def prepare_batch(self, requests: Sequence[Request]) -> SimPreparedBatch:
+        rs = list(requests)
+        cost = (self.host_ms_per_batch
+                + self.host_ms_per_request * len(rs)) * 1e-3
+        if cost > 0:
+            self.sleep(cost)
+        return SimPreparedBatch(
+            requests=rs,
+            max_new=max((r.max_new_tokens for r in rs), default=0))
+
+    # -- device-side execute stage ------------------------------------------
+    def execute_prepared(self, pb: SimPreparedBatch, *,
+                         device=None) -> List[Completion]:
+        rs = pb.requests
+        if not rs:
+            return []
+        cost = (self.device_ms_per_batch
+                + self.device_ms_per_token * len(rs) * pb.max_new) * 1e-3
+        if cost > 0:
+            self.sleep(cost)
+        return [Completion(rid=r.rid,
+                           tokens=self._tokens(r),
+                           prefill_ms=0.0,
+                           decode_ms=cost * 1e3,
+                           batch_size=len(rs))
+                for r in rs]
+
+    def generate_batch(self, requests: Sequence[Request]) -> List[Completion]:
+        if not requests:
+            return []
+        return self.execute_prepared(self.prepare_batch(requests))
+
+    def _tokens(self, r: Request) -> np.ndarray:
+        # deterministic in the request alone: identical across replicas,
+        # routing policies, and batch compositions (bit-identity anchor)
+        n = r.max_new_tokens
+        return ((int(r.rid) * 1009 + np.arange(n, dtype=np.int64) * 31 + 7)
+                % self.vocab).astype(np.int32)
+
+
+def sim_requests(n: int, *, max_new_tokens: int = 4, prompt_len: int = 8,
+                 arrivals: Optional[np.ndarray] = None,
+                 rid_base: int = 0, vocab: int = 256,
+                 skew: Optional[Sequence[int]] = None) -> List[Request]:
+    """Deterministic request stream for simulation runs; ``skew`` cycles
+    per-request decode lengths (e.g. ``(16, 1)`` alternates heavy/light)."""
+    rng = np.random.default_rng(rid_base + 7)
+    out = []
+    for i in range(n):
+        mn = skew[i % len(skew)] if skew else max_new_tokens
+        out.append(Request(
+            rid=rid_base + i,
+            tokens=rng.integers(1, vocab, prompt_len).astype(np.int32),
+            max_new_tokens=int(mn),
+            arrival=float(arrivals[i]) if arrivals is not None else 0.0))
+    return out

@@ -185,6 +185,23 @@ def param_shardings(params_tree, cfg: ModelConfig, ctx: ShardCtx):
         is_leaf=lambda x: isinstance(x, P))
 
 
+def replica_device_groups(mesh: Mesh, axis: str = "data"):
+    """Split a mesh's device grid into per-replica device groups along one
+    named axis: replica ``i`` gets the (flattened) devices of slice ``i``.
+
+    Serving maps one engine replica per slice
+    (``repro.serve.EngineGroup.from_mesh``); the remaining axes stay
+    available for intra-replica parallelism, and a replica whose slice
+    holds several devices round-robins batches within it.
+    """
+    if axis not in mesh.axis_names:
+        raise ValueError(
+            f"mesh has no axis {axis!r} (axes: {tuple(mesh.axis_names)})")
+    ax = tuple(mesh.axis_names).index(axis)
+    grid = np.moveaxis(np.asarray(mesh.devices), ax, 0)
+    return [list(grid[i].ravel()) for i in range(grid.shape[0])]
+
+
 def cache_shardings(cache_tree, cfg: ModelConfig, ctx: ShardCtx):
     """Shardings for the decode cache tree."""
     mx = ctx.model_axis

@@ -1,0 +1,236 @@
+"""Sharded multi-replica serving: routing policies, per-replica pipelines,
+straggler isolation, mesh-derived replica groups."""
+import jax
+import numpy as np
+import pytest
+
+from repro.ft.failures import DelayInjector
+from repro.serve import (AsyncScheduler, EngineGroup, OpenLoopGen,
+                         RoutingPolicy, SchedulerConfig, ServeConfig,
+                         SimServer, SyntheticWorkload, batch_work, build,
+                         sim_requests)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: N replicas, sticky routing vs single-replica sync baseline
+# ---------------------------------------------------------------------------
+
+def test_sticky_n_replica_bit_identical_to_sync_baseline():
+    """3 sticky-routed replicas must produce completions bit-identical to
+    the single-replica synchronous baseline for the same stream (the
+    Server.serve bit-identity guarantee)."""
+    srv = build(ServeConfig(model="llama3.2-3b", max_seq=48, replicas=3,
+                            routing="sticky", target_batch=4,
+                            deadline=0.01))
+    workload = SyntheticWorkload(vocab=srv.engine.cfg.vocab, prompt_len=6,
+                                 max_new_tokens=3, seed=1)
+    reqs = OpenLoopGen(workload, qps=200.0, n=12, seed=7).requests()
+    sync = srv.serve(reqs, mode="sync")
+    sharded = srv.serve(reqs, mode="pipelined")
+    assert len(sync) == len(sharded) == 12
+    by_sync = {c.rid: c for c in sync}
+    for c in sharded:
+        ref = by_sync[c.rid]
+        np.testing.assert_array_equal(ref.tokens, c.tokens)
+        assert ref.batch_size == c.batch_size
+        assert ref.truncated == c.truncated
+    # sticky placement is content-addressed: every routing decision says so
+    rep = srv.report()
+    assert rep.routing.get("sticky", 0) > 0
+    assert set(rep.routing) <= {"sticky", "single"}
+
+
+def test_sticky_routing_is_timing_independent():
+    """Sticky assignment depends only on batch content (min rid mod R):
+    two identical dispatch sequences land on identical replicas."""
+    def placements():
+        group = EngineGroup.from_servers(
+            [SimServer(host_ms_per_batch=0.0, device_ms_per_batch=0.5)
+             for _ in range(3)], routing="sticky")
+        run = group.open().start()
+        seen = []
+        for i in range(9):
+            pb = group.prepare_batch(sim_requests(2, rid_base=i * 10))
+            seen.append(run.dispatch(pb))
+        run.finish()
+        return seen
+
+    a, b = placements(), placements()
+    assert a == b
+    assert a == [(i * 10) % 3 for i in range(9)]
+
+
+# ---------------------------------------------------------------------------
+# least-outstanding-work routing under skewed decode lengths
+# ---------------------------------------------------------------------------
+
+def test_least_loaded_balances_skewed_decode_lengths():
+    """Alternating heavy (long decode) and light batches: work-aware
+    routing must not pile the heavy ones onto one replica — per-replica
+    busy time stays balanced even though per-batch cost is 16x skewed."""
+    group = EngineGroup.from_servers(
+        [SimServer(host_ms_per_batch=0.0, device_ms_per_token=1.0)
+         for _ in range(2)], routing="least_loaded")
+    from repro.serve import MetricsCollector
+    metrics = MetricsCollector()
+    run = group.open(metrics=metrics).start()
+    # heavy batch = 16 decode steps (~16 ms), light = 1 (~1 ms)
+    reqs = sim_requests(24, skew=(16, 1))
+    for r in reqs:
+        run.dispatch(group.prepare_batch([r]))
+    run.finish()
+    rep = metrics.report()
+    assert set(rep.per_replica) == {0, 1}
+    busy = [rep.per_replica[i].busy_s for i in (0, 1)]
+    assert min(busy) > 0
+    assert max(busy) / min(busy) < 2.0      # work-balanced, not count-based
+    assert rep.routing.get("least_loaded", 0) > 0
+
+
+def test_batch_work_counts_prefill_plus_padded_decode():
+    rs = sim_requests(2, prompt_len=8, skew=(16, 2))
+    # decode loop runs to the batch max for every row: 2*(8+16)
+    assert batch_work(rs) == 2 * (8 + 16)
+    assert batch_work([]) == 0
+
+
+def test_tie_break_round_robin_cycles_replicas():
+    """With zero outstanding work everywhere, ties cycle round-robin so
+    cold replicas warm evenly."""
+    group = EngineGroup.from_servers(
+        [SimServer(host_ms_per_batch=0.0, device_ms_per_batch=0.0)
+         for _ in range(3)])
+    run = group.open()
+    picks = [run._route(type("PB", (), {"requests": sim_requests(1)})())
+             for _ in range(6)]
+    assert [i for i, _ in picks] == [0, 1, 2, 0, 1, 2]
+    assert all(reason == "tie_break" for _, reason in picks)
+
+
+# ---------------------------------------------------------------------------
+# straggler isolation: one slow replica must not stall shared admission
+# ---------------------------------------------------------------------------
+
+def test_slow_replica_does_not_stall_admission_queue():
+    """Replica 0 is made a straggler via repro.ft.failures.DelayInjector.
+    Least-outstanding-work routing must route around it: the full stream
+    completes, and the healthy replica serves more batches."""
+    group = EngineGroup.from_servers(
+        [SimServer(host_ms_per_batch=0.0, device_ms_per_batch=1.0)
+         for _ in range(2)],
+        routing="least_loaded",
+        delay=DelayInjector({0: 0.05}))     # +50 ms per batch on replica 0
+    sched = AsyncScheduler(group, target_batch=2, deadline=0.001,
+                           max_queue=8, policy="block")
+    for r in sim_requests(32, max_new_tokens=2):
+        sched.submit(r)                     # block policy: would wedge if
+                                            # the straggler stalled the path
+    outs = sched.result()
+    assert len(outs) == 32
+    rep = sched.report()
+    assert rep.max_queue_depth <= 8
+    healthy = rep.per_replica[1].n_batches
+    straggler = rep.per_replica[0].n_batches
+    assert healthy > straggler
+    assert healthy + straggler == len(rep.batch_sizes)
+
+
+# ---------------------------------------------------------------------------
+# per-replica metrics + config plumbing
+# ---------------------------------------------------------------------------
+
+def test_per_replica_metrics_and_routing_counters():
+    srv = build(ServeConfig(
+        replicas=2, target_batch=4, deadline=1.0,
+        server_factory=lambda i: SimServer(host_ms_per_batch=0.5,
+                                           device_ms_per_batch=2.0)))
+    outs = srv.serve(sim_requests(32), mode="pipelined")
+    assert len(outs) == 32
+    rep = srv.report()
+    d = rep.as_dict()
+    assert set(d["per_replica"]) == {0, 1}
+    n_routed = sum(rep.routing.values())
+    n_batches = sum(rep.per_replica[i].n_batches for i in (0, 1))
+    assert n_routed == n_batches == len(rep.batch_sizes)
+    for stats in rep.per_replica.values():
+        assert 0.0 <= stats.idle_fraction <= 1.0
+        assert stats.max_pipeline_depth >= 0
+        assert stats.max_outstanding_work > 0
+
+
+def test_scheduler_config_replicas_and_routing_expand_group():
+    srv_cfg = SchedulerConfig(replicas=3, routing="sticky")
+    assert srv_cfg.routing is RoutingPolicy.STICKY
+    sched = AsyncScheduler(
+        SimServer(host_ms_per_batch=0.0, device_ms_per_batch=0.0), srv_cfg)
+    assert len(sched.group.replicas) == 3
+    for r in sim_requests(6):
+        sched.submit(r)
+    assert len(sched.result()) == 6
+
+
+def test_routing_policy_validation_lists_values():
+    with pytest.raises(ValueError, match="least_loaded"):
+        SchedulerConfig(routing="fastest_first")
+    with pytest.raises(ValueError, match="least_loaded"):
+        EngineGroup.from_servers([SimServer()], routing="bogus")
+
+
+def test_replica_error_propagates_from_result():
+    """A dead replica must surface its error out of result(), not wedge
+    the dispatcher on the dead replica's full handoff queue."""
+    class ExplodingServer(SimServer):
+        def execute_prepared(self, pb, *, device=None):
+            raise RuntimeError("boom")
+
+    group = EngineGroup.from_servers([ExplodingServer(), ExplodingServer()])
+    sched = AsyncScheduler(group, target_batch=1, deadline=0.001,
+                           max_queue=16)
+    for r in sim_requests(6):
+        sched.submit(r)
+    with pytest.raises(RuntimeError):
+        sched.result()
+
+
+# ---------------------------------------------------------------------------
+# mesh-derived replica groups
+# ---------------------------------------------------------------------------
+
+def test_replica_device_groups_partition_mesh():
+    from jax.sharding import Mesh
+
+    from repro.sharding.specs import replica_device_groups
+    devs = jax.devices()
+    mesh = Mesh(np.asarray(devs).reshape(len(devs), 1), ("data", "model"))
+    groups = replica_device_groups(mesh, axis="data")
+    assert len(groups) == len(devs)
+    assert sorted(d.id for g in groups for d in g) == \
+        sorted(d.id for d in devs)
+    with pytest.raises(ValueError, match="axis"):
+        replica_device_groups(mesh, axis="pod")
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >=2 devices "
+                           "(XLA_FLAGS=--xla_force_host_platform_device_count=2)")
+def test_mesh_replicas_bit_identical_on_two_devices():
+    """CI matrix job: one replica per mesh slice, least-loaded routing,
+    completions bit-identical to the sync baseline."""
+    from jax.sharding import Mesh
+
+    from repro.serve import LMServer
+    from repro.configs.base import get_config
+    devs = jax.devices()
+    mesh = Mesh(np.asarray(devs).reshape(len(devs), 1), ("data", "model"))
+    server = LMServer(get_config("llama3.2-3b").reduced(), max_seq=48)
+    group = EngineGroup.from_mesh(server, mesh, axis="data")
+    assert len(group.replicas) == len(devs)
+    workload = SyntheticWorkload(vocab=server.cfg.vocab, prompt_len=6,
+                                 max_new_tokens=3, seed=1)
+    reqs = OpenLoopGen(workload, qps=200.0, n=10, seed=7).requests()
+    sync = server.serve_stream(reqs, target_batch=4, deadline=0.01)
+    groups = server.form_batches(reqs, target_batch=4, deadline=0.01)
+    sharded = group.run_groups(groups)
+    by_sync = {c.rid: c for c in sync}
+    for c in sharded:
+        np.testing.assert_array_equal(by_sync[c.rid].tokens, c.tokens)

@@ -1,0 +1,123 @@
+"""Unified serving front end: ServeConfig/build facade, Server.serve modes,
+BackpressurePolicy enum, deprecation shims for the old entry points."""
+import numpy as np
+import pytest
+
+from repro.serve import (BackpressurePolicy, OpenLoopGen, SchedulerConfig,
+                         ServeConfig, SimServer, SyntheticWorkload, build,
+                         run_pipelined, sim_requests)
+
+
+@pytest.fixture(scope="module")
+def srv():
+    return build(ServeConfig(model="llama3.2-3b", max_seq=48,
+                             target_batch=4, deadline=0.01))
+
+
+@pytest.fixture(scope="module")
+def workload(srv):
+    return SyntheticWorkload(vocab=srv.engine.cfg.vocab, prompt_len=6,
+                             max_new_tokens=3, seed=1)
+
+
+def test_build_wires_full_stack(srv):
+    assert len(srv.group.replicas) == 1
+    assert srv.engine is srv.group.replicas[0].server
+    assert srv.engines == [srv.engine]
+    assert srv.report().n_requests == 0     # shared collector, fresh
+
+
+def test_serve_modes_bit_identical(srv, workload):
+    """Server.serve documents the bit-identity guarantee: pipelined mode
+    must equal the synchronous baseline for the same stream."""
+    reqs = OpenLoopGen(workload, qps=200.0, n=12, seed=7).requests()
+    sync = srv.serve(reqs, mode="sync")
+    pipe = srv.serve(reqs, mode="pipelined")
+    assert len(sync) == len(pipe) == 12
+    by_sync = {c.rid: c for c in sync}
+    for c in pipe:
+        np.testing.assert_array_equal(by_sync[c.rid].tokens, c.tokens)
+        assert by_sync[c.rid].batch_size == c.batch_size
+
+
+def test_serve_rejects_unknown_mode(srv, workload):
+    with pytest.raises(ValueError, match="mode"):
+        srv.serve(workload.build(2), mode="turbo")
+
+
+def test_default_session_submit_result(srv, workload):
+    for r in workload.build(6, rid_base=500):
+        assert srv.submit(r)
+    outs = srv.result()
+    assert sorted(c.rid for c in outs) == list(range(500, 506))
+    assert srv.result() == []               # session is drained + recycled
+    rep = srv.report()
+    assert rep.n_completed >= 6             # shared metrics saw the session
+
+
+def test_session_overrides_scheduler_knobs(srv, workload):
+    sched = srv.session(policy="block", deadline=5.0, max_queue=32,
+                        target_batch=2)
+    assert sched.cfg.policy is BackpressurePolicy.BLOCK
+    for r in workload.build(4, rid_base=600):
+        sched.submit(r)
+    outs = sched.result()
+    assert len(outs) == 4
+    assert all(o.batch_size == 2 for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# BackpressurePolicy enum
+# ---------------------------------------------------------------------------
+
+def test_policy_enum_accepts_strings_and_members():
+    assert SchedulerConfig(policy="reject").policy \
+        is BackpressurePolicy.REJECT
+    assert SchedulerConfig(policy=BackpressurePolicy.SHED_OLDEST).policy \
+        is BackpressurePolicy.SHED_OLDEST
+    # str-mixin: existing string comparisons keep working
+    assert SchedulerConfig(policy="block").policy == "block"
+    assert str(BackpressurePolicy.BLOCK) == "block"
+
+
+def test_policy_validation_error_lists_valid_values():
+    with pytest.raises(ValueError) as ei:
+        SchedulerConfig(policy="drop_everything")
+    msg = str(ei.value)
+    for valid in ("reject", "shed_oldest", "block"):
+        assert valid in msg
+    assert "drop_everything" in msg
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims for the collapsed entry points
+# ---------------------------------------------------------------------------
+
+def test_run_pipelined_shim_warns_and_matches(srv, workload):
+    reqs = workload.build(6, rid_base=700)
+    groups = srv.engine.form_batches(reqs, target_batch=4, deadline=0.01)
+    with pytest.warns(DeprecationWarning, match="run_pipelined"):
+        old = run_pipelined(srv.engine, groups)
+    new = srv.group.run_groups(groups)
+    by_old = {c.rid: c for c in old}
+    assert sorted(by_old) == sorted(c.rid for c in new)
+    for c in new:
+        np.testing.assert_array_equal(by_old[c.rid].tokens, c.tokens)
+
+
+def test_serve_stream_pipeline_true_warns(srv, workload):
+    reqs = workload.build(4, rid_base=800)
+    with pytest.warns(DeprecationWarning, match="serve_stream"):
+        outs = srv.engine.serve_stream(reqs, target_batch=4, deadline=0.01,
+                                       pipeline=True)
+    assert len(outs) == 4
+
+
+def test_server_facade_works_with_sim_factory():
+    srv = build(ServeConfig(
+        replicas=2, target_batch=4, deadline=1.0,
+        server_factory=lambda i: SimServer(device_ms_per_batch=1.0)))
+    assert len(srv.group.replicas) == 2
+    assert len(srv.engines) == 2            # distinct engines, one each
+    outs = srv.serve(sim_requests(16), mode="pipelined")
+    assert len(outs) == 16
