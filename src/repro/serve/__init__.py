@@ -17,20 +17,25 @@ Modules:
                   per-replica host-encode/device-execute pipelines
 - ``scheduler`` — AsyncScheduler (bounded admission, BackpressurePolicy
                   REJECT/SHED_OLDEST/BLOCK), deprecated run_pipelined shim
+- ``cache``     — content-addressed ResultCache (TTL + byte-bounded LRU)
+                  and single-flight Coalescer; enable via
+                  ``ServeConfig(cache=CacheConfig(...))`` (default off)
 - ``sim``       — SimServer: wall-clock host/device cost simulation for
                   replica-scaling studies without real accelerators
 - ``loadgen``   — open-loop (Poisson) / closed-loop (fixed concurrency)
-                  seeded load generators
+                  seeded load generators, optional Zipfian key-reuse
 - ``metrics``   — per-request latency breakdown, device-idle-fraction,
-                  per-replica queue depth / idle / routing counters
+                  per-replica queue depth / idle / routing / cache counters
 """
+from repro.serve.cache import (CacheConfig, CachedResult, Coalescer,
+                               ResultCache, request_key)
 from repro.serve.engine import (Completion, LMServer, PreparedBatch,
                                 Request, form_batch_groups)
 from repro.serve.group import (EngineGroup, GroupRun, Replica,
                                RoutingPolicy, batch_work)
 from repro.serve.loadgen import (ClosedLoopGen, OpenLoopGen,
                                  SyntheticWorkload, poisson_arrivals,
-                                 uniform_arrivals)
+                                 uniform_arrivals, zipf_probs)
 from repro.serve.metrics import (LatencyStats, MetricsCollector,
                                  ReplicaStats, RequestTrace, RunReport)
 from repro.serve.scheduler import (AsyncScheduler, BackpressurePolicy,
@@ -39,11 +44,13 @@ from repro.serve.server import ServeConfig, Server, build
 from repro.serve.sim import SimServer, sim_requests
 
 __all__ = [
+    "CacheConfig", "CachedResult", "Coalescer", "ResultCache",
+    "request_key",
     "Completion", "LMServer", "PreparedBatch", "Request",
     "form_batch_groups",
     "EngineGroup", "GroupRun", "Replica", "RoutingPolicy", "batch_work",
     "ClosedLoopGen", "OpenLoopGen", "SyntheticWorkload",
-    "poisson_arrivals", "uniform_arrivals",
+    "poisson_arrivals", "uniform_arrivals", "zipf_probs",
     "LatencyStats", "MetricsCollector", "ReplicaStats", "RequestTrace",
     "RunReport",
     "AsyncScheduler", "BackpressurePolicy", "SchedulerConfig",

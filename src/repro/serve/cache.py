@@ -1,0 +1,278 @@
+"""Content-addressed result cache + in-flight request coalescing.
+
+The paper's central serving finding (§5–6) — and what PR 2's replica sweep
+reproduced — is that the *serial host prepare path* caps aggregate
+throughput no matter how many accelerator replicas sit behind it. Travel-
+search traffic is highly repetitive (the same origin/destination/date
+query recurs within seconds), so the highest-leverage fix is to stop
+re-encoding and re-executing identical work at all: the caching-near-the-
+accelerator pattern that "Data Processing with FPGAs on Modern
+Architectures" identifies as key to cost-effective deployments. Two
+mechanisms, both content-addressed by :func:`request_key` (a canonical
+hash of everything that determines a request's result — prompt tokens,
+decode budget, MCT queries + connect times; never the rid or arrival
+time):
+
+- :class:`ResultCache` — completed results, TTL + byte-bounded LRU.
+  A hit costs zero host encode and zero device time. Fully deterministic:
+  eviction is strict LRU over insertion/touch order and TTL expiry is
+  judged against the caller's clock (logical replay time in
+  ``Server.serve``, pipeline time in ``AsyncScheduler``), so a seeded run
+  always produces the same hit/miss/eviction sequence.
+- :class:`Coalescer` — single-flight dedup of identical *concurrent*
+  requests ahead of admission: the first request with a given key is the
+  **leader** and flows through the pipeline; identical requests that
+  arrive while it is in flight become **followers** that subscribe to its
+  completion. Followers never occupy admission-queue space, so they can
+  never be rejected, blocked, or shed independently of their leader — if
+  the leader is shed (``shed_oldest``) or MCT-filtered, its followers are
+  dropped with it, atomically.
+
+Because every engine replica serves the same model and results are pure
+functions of request content, a minted cache/coalesce completion is
+bit-identical (tokens, truncated flag) to what re-executing the request
+would have produced — which is what lets measured throughput climb
+*above* the serial-host prepare cap without breaking the serving stack's
+bit-identity guarantee.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.serve.engine import Completion, Request
+
+# accounting overhead per entry (key, OrderedDict slot, dataclass) so a
+# cache full of tiny completions still has a meaningful byte bound
+_ENTRY_OVERHEAD = 96
+
+
+def request_key(req: Request) -> str:
+    """Canonical content hash of a request: everything that determines its
+    result (prompt tokens, decode budget, MCT queries, connect times) and
+    nothing that doesn't (rid, arrival time). Two requests with equal keys
+    are interchangeable — the cache/coalescer substitutes one's result for
+    the other's."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.ascontiguousarray(np.asarray(req.tokens, np.int64)).tobytes())
+    h.update(int(req.max_new_tokens).to_bytes(8, "little", signed=True))
+    for q in req.mct_queries:
+        for k in sorted(q):
+            h.update(str(k).encode())
+            h.update(int(q[k]).to_bytes(8, "little", signed=True))
+        h.update(b";")
+    for m in req.connect_minutes:
+        h.update(int(m).to_bytes(8, "little", signed=True))
+    return h.hexdigest()
+
+
+@dataclass
+class CacheConfig:
+    """Serving-layer result cache knobs (attach to ``ServeConfig.cache``
+    / ``SchedulerConfig.cache``; ``None`` keeps caching fully off and the
+    serving stack bit-identical to its uncached behavior).
+
+    ``max_bytes`` — resident-size bound; strict LRU eviction above it.
+    ``ttl``       — seconds (in the caller's clock) before an entry goes
+                    stale; ``None`` disables expiry.
+    ``coalesce``  — single-flight dedup of identical in-flight requests.
+    """
+    max_bytes: int = 64 << 20
+    ttl: Optional[float] = None
+    coalesce: bool = True
+
+    @classmethod
+    def coerce(cls, value: Union[None, bool, dict, "CacheConfig"]
+               ) -> Optional["CacheConfig"]:
+        """Normalise the config-field spellings: None/False -> off,
+        True -> defaults, dict -> kwargs, CacheConfig -> itself."""
+        if value is None or value is False:
+            return None
+        if value is True:
+            return cls()
+        if isinstance(value, dict):
+            return cls(**value)
+        if isinstance(value, cls):
+            return value
+        raise ValueError(
+            f"cache must be None/bool/dict/CacheConfig, got {value!r}")
+
+
+@dataclass
+class CachedResult:
+    """One cached completion payload: the content-determined fields only
+    (tokens, truncated, the batch size it was produced at), plus the
+    replica that produced it (per-replica hit-rate accounting) and the
+    byte/TTL accounting."""
+    tokens: np.ndarray
+    truncated: bool
+    batch_size: int
+    replica: Optional[int]
+    stored_at: float
+    nbytes: int
+
+    @classmethod
+    def of(cls, comp: Completion, *, replica: Optional[int] = None,
+           now: float = 0.0) -> "CachedResult":
+        toks = np.array(comp.tokens, np.int32, copy=True)
+        return cls(tokens=toks, truncated=comp.truncated,
+                   batch_size=comp.batch_size, replica=replica,
+                   stored_at=now, nbytes=int(toks.nbytes) + _ENTRY_OVERHEAD)
+
+    def mint(self, rid: int) -> Completion:
+        """A completion for ``rid`` served from this entry: zero host
+        encode, zero device time (prefill/decode report 0 ms)."""
+        return Completion(rid=rid, tokens=self.tokens.copy(),
+                          prefill_ms=0.0, decode_ms=0.0,
+                          batch_size=self.batch_size,
+                          truncated=self.truncated)
+
+
+class ResultCache:
+    """Thread-safe content-addressed completion cache with TTL + strict
+    byte-bounded LRU eviction. Shared across replicas (one instance per
+    ``Server``, visible to every session and serve() call), so a result
+    computed on any replica serves hits for all of them.
+
+    The optional ``metrics`` argument on :meth:`get`/:meth:`put` forwards
+    stale/eviction/bytes-resident events to that run's
+    ``MetricsCollector``; the cache also keeps its own lifetime
+    :meth:`stats` since one cache may outlive many sessions.
+    """
+
+    def __init__(self, config: Union[None, bool, dict, CacheConfig] = None):
+        self.cfg = CacheConfig.coerce(config) or CacheConfig()
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[str, CachedResult]" = OrderedDict()
+        self.bytes_resident = 0
+        self._counts = {"hits": 0, "misses": 0, "stale": 0,
+                        "evictions": 0, "stores": 0}
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def get(self, key: str, now: float, *,
+            metrics=None) -> Optional[CachedResult]:
+        """Look up ``key`` at time ``now`` (caller's clock). Returns the
+        entry (touching its LRU position) or None on miss/TTL expiry.
+        Misses are counted internally only — the caller decides whether a
+        miss turns into an admitted leader (see AsyncScheduler.submit)."""
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None:
+                self._counts["misses"] += 1
+                return None
+            if self.cfg.ttl is not None and now - e.stored_at > self.cfg.ttl:
+                del self._entries[key]
+                self.bytes_resident -= e.nbytes
+                self._counts["stale"] += 1
+                if metrics is not None:
+                    metrics.on_cache("stale")
+                    metrics.note_cache_bytes(self.bytes_resident,
+                                             len(self._entries))
+                return None
+            self._entries.move_to_end(key)
+            self._counts["hits"] += 1
+            return e
+
+    def put(self, key: str, entry: CachedResult, *, metrics=None) -> None:
+        """Insert/replace ``key``, then evict strictly-LRU until the byte
+        bound holds (an entry larger than ``max_bytes`` evicts itself)."""
+        with self._lock:
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self.bytes_resident -= old.nbytes
+            self._entries[key] = entry
+            self.bytes_resident += entry.nbytes
+            self._counts["stores"] += 1
+            evicted = 0
+            while self.bytes_resident > self.cfg.max_bytes and self._entries:
+                _, e = self._entries.popitem(last=False)
+                self.bytes_resident -= e.nbytes
+                evicted += 1
+            if evicted:
+                self._counts["evictions"] += evicted
+            if metrics is not None:
+                if evicted:
+                    metrics.on_cache("evictions", evicted)
+                metrics.note_cache_bytes(self.bytes_resident,
+                                         len(self._entries))
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def stats(self) -> Dict[str, int]:
+        """Lifetime counters (across every session sharing this cache)."""
+        with self._lock:
+            return dict(self._counts, bytes_resident=self.bytes_resident,
+                        entries=len(self._entries))
+
+
+class Coalescer:
+    """Single-flight table for identical concurrent requests.
+
+    ``claim(key, rid)`` marks an admitted request as the in-flight leader
+    for its content key; ``attach(key, req)`` registers a later identical
+    request as a follower of that leader (returns the leader rid, or None
+    when nothing is in flight / coalescing is disabled — the caller then
+    admits it normally). ``resolve(rid)`` / ``fail(rid)`` retire a leader
+    on completion / shed-or-drop, handing back its followers so the
+    scheduler can mint their completions or drop them *with* the leader.
+
+    With ``enabled=False`` the table still tracks rid -> key so completed
+    leaders can fill the :class:`ResultCache`, but never coalesces.
+    """
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._lock = threading.Lock()
+        self._flights: Dict[str, Tuple[int, List[Request]]] = {}
+        self._key_of: Dict[int, str] = {}
+
+    def attach(self, key: str, req: Request) -> Optional[int]:
+        if not self.enabled:
+            return None
+        with self._lock:
+            flight = self._flights.get(key)
+            if flight is None:
+                return None
+            flight[1].append(req)
+            return flight[0]
+
+    def claim(self, key: str, rid: int) -> None:
+        with self._lock:
+            self._key_of[rid] = key
+            if self.enabled and key not in self._flights:
+                self._flights[key] = (rid, [])
+
+    def _retire(self, rid: int) -> Tuple[Optional[str], List[Request]]:
+        with self._lock:
+            key = self._key_of.pop(rid, None)
+            if key is None:
+                return None, []
+            flight = self._flights.get(key)
+            if flight is not None and flight[0] == rid:
+                del self._flights[key]
+                return key, flight[1]
+            return key, []
+
+    def resolve(self, rid: int) -> Tuple[Optional[str], List[Request]]:
+        """Leader ``rid`` completed: returns (key, followers to mint)."""
+        return self._retire(rid)
+
+    def fail(self, rid: int) -> Tuple[Optional[str], List[Request]]:
+        """Leader ``rid`` was shed/dropped: returns (key, followers to
+        drop with it). The key is released so the next identical request
+        becomes a fresh leader."""
+        return self._retire(rid)
+
+    def in_flight(self) -> int:
+        with self._lock:
+            return len(self._flights)

@@ -357,14 +357,24 @@ class EngineGroup:
         ``run_pipelined`` / ``serve_stream(pipeline=True)`` shims.
         """
         run = self.open(pipeline_depth=pipeline_depth, metrics=metrics).start()
-        for rs in groups:
-            rs = list(rs)
-            if not rs:
-                continue
-            t0 = time.perf_counter()
-            pb = self.prepare_batch(rs)     # overlaps device execution
-            t1 = time.perf_counter()
-            if metrics is not None:
-                metrics.on_encode([r.rid for r in rs], t0, t1)
-            run.dispatch(pb)
+        try:
+            for rs in groups:
+                rs = list(rs)
+                if not rs:
+                    continue
+                t0 = time.perf_counter()
+                pb = self.prepare_batch(rs)     # overlaps device execution
+                t1 = time.perf_counter()
+                if metrics is not None:
+                    metrics.on_encode([r.rid for r in rs], t0, t1)
+                run.dispatch(pb)
+        except BaseException:
+            # prepare/dispatch failed mid-run: reap every replica worker
+            # thread before propagating, so a failed serve() never leaks
+            # the pipeline (finish() errors must not mask the original)
+            try:
+                run.finish()
+            except Exception:
+                pass
+            raise
         return run.finish()

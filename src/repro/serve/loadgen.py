@@ -14,6 +14,16 @@ the accelerator" — needs two controllable axes to reproduce:
 
 Everything is seeded: the same (seed, qps, n) always yields the same
 arrival schedule and request contents.
+
+A third axis matters once the serving layer caches results
+(``repro.serve.cache``): **content repetition**. Travel-search traffic
+re-asks the same origin/destination/date queries within seconds, so
+``SyntheticWorkload(unique_keys=K, repeat_alpha=a)`` draws every request's
+content from ``K`` fixed prototypes with Zipf(``a``) popularity —
+``a = 0`` is uniform reuse, larger ``a`` concentrates traffic on the head
+keys. Both the open- and closed-loop generators inherit the mode through
+their workload. The default (``unique_keys = 0``) keeps the original
+every-request-unique stream byte-identical.
 """
 from __future__ import annotations
 
@@ -39,34 +49,69 @@ def uniform_arrivals(n: int, qps: float, *, start: float = 0.0) -> np.ndarray:
     return start + (np.arange(n, dtype=np.float64) + 1.0) / qps
 
 
+def zipf_probs(k: int, alpha: float) -> np.ndarray:
+    """Zipf(``alpha``) popularity over ``k`` ranked keys (``alpha = 0`` is
+    uniform): p(rank r) proportional to 1 / r**alpha."""
+    if k <= 0:
+        raise ValueError(f"need k >= 1 keys, got {k}")
+    w = np.arange(1, k + 1, dtype=np.float64) ** -float(alpha)
+    return w / w.sum()
+
+
 @dataclass
 class SyntheticWorkload:
-    """Seeded request factory with dialable host-side work per request."""
+    """Seeded request factory with dialable host-side work per request.
+
+    With ``unique_keys > 0`` the stream draws request *content* (tokens +
+    MCT queries) from that many fixed prototypes under Zipf
+    (``repeat_alpha``) popularity — repeat-heavy traffic for result-cache
+    studies. Two requests drawn from the same prototype are content-equal
+    (same ``repro.serve.cache.request_key``) even though their rids and
+    arrivals differ. The default ``unique_keys = 0`` keeps every request's
+    content unique and byte-identical to the pre-cache generator.
+    """
     vocab: int = 256
     prompt_len: int = 8
     max_new_tokens: int = 4
     n_mct_queries: int = 0        # >0 needs ``ruleset`` for query synthesis
     ruleset: object = None
     seed: int = 0
+    # content repetition (off by default): number of distinct request
+    # prototypes and the Zipf popularity skew across them
+    unique_keys: int = 0
+    repeat_alpha: float = 0.0
 
     def build(self, n: int, arrivals: Optional[np.ndarray] = None,
               rid_base: int = 0) -> List[Request]:
         rng = np.random.default_rng(self.seed)
+        n_content = self.unique_keys if self.unique_keys > 0 else n
         mct_pool: List[dict] = []
         if self.n_mct_queries > 0:
             if self.ruleset is None:
                 raise ValueError("n_mct_queries > 0 requires a ruleset")
             from repro.core.rules import generate_queries
             mct_pool = generate_queries(self.ruleset,
-                                        n * self.n_mct_queries,
+                                        n_content * self.n_mct_queries,
                                         seed=self.seed)
+        protos: Optional[List[np.ndarray]] = None
+        choice: Optional[np.ndarray] = None
+        if self.unique_keys > 0:
+            protos = [rng.integers(1, self.vocab,
+                                   self.prompt_len).astype(np.int32)
+                      for _ in range(self.unique_keys)]
+            choice = rng.choice(self.unique_keys, size=n,
+                                p=zipf_probs(self.unique_keys,
+                                             self.repeat_alpha))
         out = []
         for i in range(n):
-            qs = mct_pool[i * self.n_mct_queries:(i + 1) * self.n_mct_queries]
+            j = int(choice[i]) if choice is not None else i
+            toks = protos[j].copy() if protos is not None \
+                else rng.integers(1, self.vocab,
+                                  self.prompt_len).astype(np.int32)
+            qs = mct_pool[j * self.n_mct_queries:(j + 1) * self.n_mct_queries]
             out.append(Request(
                 rid=rid_base + i,
-                tokens=rng.integers(1, self.vocab,
-                                    self.prompt_len).astype(np.int32),
+                tokens=toks,
                 max_new_tokens=self.max_new_tokens,
                 arrival=float(arrivals[i]) if arrivals is not None else 0.0,
                 mct_queries=list(qs),

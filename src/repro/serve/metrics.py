@@ -29,6 +29,9 @@ class RequestTrace:
     completed: Optional[float] = None
     rejected: bool = False
     shed: bool = False
+    replica: Optional[int] = None     # which replica executed it
+    cache_hit: bool = False           # served from the result cache
+    coalesced: bool = False           # follower of an in-flight leader
 
     def _ms(self, a: Optional[float], b: Optional[float]) -> Optional[float]:
         return (b - a) * 1e3 if a is not None and b is not None else None
@@ -111,13 +114,17 @@ class ReplicaStats:
     idle_fraction: float
     max_pipeline_depth: int       # prepared batches queued in its handoff
     max_outstanding_work: int     # routing's work-unit view at dispatch
+    cache_hits: int = 0           # hits served from results this replica made
+    cache_hit_rate: float = 0.0   # hits / (hits + requests it executed)
 
     def as_dict(self) -> Dict[str, object]:
         return {"replica": self.replica, "n_batches": self.n_batches,
                 "n_requests": self.n_requests, "busy_s": self.busy_s,
                 "idle_fraction": self.idle_fraction,
                 "max_pipeline_depth": self.max_pipeline_depth,
-                "max_outstanding_work": self.max_outstanding_work}
+                "max_outstanding_work": self.max_outstanding_work,
+                "cache_hits": self.cache_hits,
+                "cache_hit_rate": self.cache_hit_rate}
 
 
 @dataclass
@@ -136,6 +143,10 @@ class RunReport:
     breakdown: Dict[str, LatencyStats]
     per_replica: Dict[int, ReplicaStats] = field(default_factory=dict)
     routing: Dict[str, int] = field(default_factory=dict)
+    # result-cache counters (empty dict when no cache was configured):
+    # hits/misses/coalesced/evictions/stale/follower_drops, bytes_resident,
+    # entries, hit_rate = (hits+coalesced)/(hits+misses+coalesced)
+    cache: Dict[str, object] = field(default_factory=dict)
 
     def as_dict(self) -> Dict[str, object]:
         return {
@@ -155,6 +166,7 @@ class RunReport:
             "per_replica": {k: v.as_dict()
                             for k, v in sorted(self.per_replica.items())},
             "routing": dict(self.routing),
+            "cache": dict(self.cache),
         }
 
     def summary(self) -> str:
@@ -167,6 +179,8 @@ class RunReport:
                 + f", device idle {self.device_idle_fraction * 100:.0f}%"
                 + (f" over {len(self.per_replica)} replicas"
                    if len(self.per_replica) > 1 else "")
+                + (f", cache hit {self.cache['hit_rate'] * 100:.0f}%"
+                   if self.cache else "")
                 + (f", p50/p95/p99 {t.p50_ms:.0f}/{t.p95_ms:.0f}/"
                    f"{t.p99_ms:.0f} ms" if t and t.n else ""))
 
@@ -188,6 +202,14 @@ class MetricsCollector:
         self._replica_max_depth: Dict[int, int] = {}
         self._replica_max_work: Dict[int, int] = {}
         self._routing: Dict[str, int] = {}
+        # result-cache state: event counters, resident-size snapshot, and
+        # per-replica hit attribution (hits credited to the replica that
+        # produced the cached entry)
+        self._cache_counts: Dict[str, int] = {}
+        self._cache_bytes = 0
+        self._cache_entries = 0
+        self._cache_seen = False
+        self._replica_cache_hits: Dict[int, int] = {}
 
     def _t(self, rid: int) -> RequestTrace:
         tr = self._traces.get(rid)
@@ -240,11 +262,70 @@ class MetricsCollector:
             for rid in rids:
                 tr = self._t(rid)
                 tr.device_start, tr.device_end = t0, t1
+                if replica is not None:
+                    tr.replica = replica
 
     def on_complete(self, rids: List[int], t: float):
         with self._lock:
             for rid in rids:
                 self._t(rid).completed = t
+
+    # -- result-cache events ---------------------------------------------------
+    def on_cache(self, event: str, n: int = 1):
+        """Generic cache counter bump (stale / evictions / follower_drops
+        — forwarded by ResultCache/AsyncScheduler)."""
+        with self._lock:
+            self._cache_seen = True
+            self._cache_counts[event] = self._cache_counts.get(event, 0) + n
+
+    def on_cache_hit(self, rid: int, t: float,
+                     replica: Optional[int] = None):
+        """Request served straight from the result cache; ``replica`` is
+        the replica that produced the cached entry (per-replica hit-rate
+        attribution)."""
+        with self._lock:
+            self._cache_seen = True
+            self._cache_counts["hits"] = self._cache_counts.get("hits", 0) + 1
+            tr = self._t(rid)
+            tr.cache_hit = True
+            if tr.arrival is None:
+                tr.arrival = t
+            if replica is not None:
+                self._replica_cache_hits[replica] = \
+                    self._replica_cache_hits.get(replica, 0) + 1
+
+    def on_cache_miss(self, rid: int):
+        """Admitted leader: content not in cache, flows through the full
+        pipeline (and fills the cache on completion)."""
+        with self._lock:
+            self._cache_seen = True
+            self._cache_counts["misses"] = \
+                self._cache_counts.get("misses", 0) + 1
+
+    def on_coalesce(self, rid: int, leader_rid: int, t: float):
+        """Follower attached to in-flight leader ``leader_rid``: costs no
+        admission-queue space, no host encode, no device time."""
+        with self._lock:
+            self._cache_seen = True
+            self._cache_counts["coalesced"] = \
+                self._cache_counts.get("coalesced", 0) + 1
+            tr = self._t(rid)
+            tr.coalesced = True
+            if tr.arrival is None:
+                tr.arrival = t
+
+    def note_cache_bytes(self, bytes_resident: int, entries: int):
+        with self._lock:
+            self._cache_seen = True
+            self._cache_bytes = bytes_resident
+            self._cache_entries = entries
+
+    def replica_of(self, rid: int) -> Optional[int]:
+        """Which replica executed ``rid`` (None if it never hit a
+        device)."""
+        with self._lock:
+            tr = self._traces.get(rid)
+            return tr.replica if tr is not None else None
 
     def note_queue_depth(self, depth: int):
         with self._lock:
@@ -284,6 +365,11 @@ class MetricsCollector:
             replica_max_depth = dict(self._replica_max_depth)
             replica_max_work = dict(self._replica_max_work)
             routing = dict(self._routing)
+            cache_counts = dict(self._cache_counts)
+            cache_bytes, cache_entries = self._cache_bytes, \
+                self._cache_entries
+            cache_seen = self._cache_seen
+            replica_cache_hits = dict(self._replica_cache_hits)
         done = [t for t in traces if t.completed is not None]
         starts = [t.arrival for t in traces if t.arrival is not None]
         ends = [t.completed for t in done]
@@ -304,9 +390,12 @@ class MetricsCollector:
                 [t.total_ms for t in done if t.total_ms is not None]),
         }
         per_replica = {}
-        for k in sorted(set(replica_batches) | set(replica_busy)):
+        for k in sorted(set(replica_batches) | set(replica_busy)
+                        | set(replica_cache_hits)):
             rb = _merged_span(replica_busy.get(k, []))
             ridle = 1.0 - rb / span if span > 0 else 0.0
+            ch = replica_cache_hits.get(k, 0)
+            served = ch + replica_requests.get(k, 0)
             per_replica[k] = ReplicaStats(
                 replica=k,
                 n_batches=replica_batches.get(k, 0),
@@ -315,7 +404,22 @@ class MetricsCollector:
                 idle_fraction=max(0.0, min(1.0, ridle)),
                 max_pipeline_depth=replica_max_depth.get(k, 0),
                 max_outstanding_work=replica_max_work.get(k, 0),
+                cache_hits=ch,
+                cache_hit_rate=ch / served if served else 0.0,
             )
+        cache: Dict[str, object] = {}
+        if cache_seen:
+            g = cache_counts.get
+            tracked = g("hits", 0) + g("misses", 0) + g("coalesced", 0)
+            cache = {
+                "hits": g("hits", 0), "misses": g("misses", 0),
+                "coalesced": g("coalesced", 0),
+                "evictions": g("evictions", 0), "stale": g("stale", 0),
+                "follower_drops": g("follower_drops", 0),
+                "bytes_resident": cache_bytes, "entries": cache_entries,
+                "hit_rate": (g("hits", 0) + g("coalesced", 0)) / tracked
+                if tracked else 0.0,
+            }
         return RunReport(
             n_requests=len(traces),
             n_completed=len(done),
@@ -331,4 +435,5 @@ class MetricsCollector:
             breakdown=breakdown,
             per_replica=per_replica,
             routing=routing,
+            cache=cache,
         )

@@ -26,6 +26,14 @@ queue (pending + aggregator buffer) is at ``max_queue``:
 - ``SHED_OLDEST`` — evict the oldest queued request, admit the new one
 - ``BLOCK``       — make the submitter wait (closed-loop behaviour)
 
+With a :class:`~repro.serve.cache.CacheConfig` on the config, ``submit``
+checks the content-addressed :class:`~repro.serve.cache.ResultCache`
+first (a hit completes immediately — zero host encode, zero device time)
+and then the single-flight :class:`~repro.serve.cache.Coalescer` (an
+identical in-flight request adopts the new one as a follower). Hits and
+followers never occupy admission-queue space, so they are exempt from all
+three backpressure policies; a shed leader drops its followers with it.
+
 ``run_pipelined`` is a deprecated shim over
 :meth:`EngineGroup.run_groups` — prefer ``repro.serve.build(cfg).serve()``.
 """
@@ -40,6 +48,8 @@ from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence, Union
 
 from repro.core.aggregator import DeadlineAggregator
+from repro.serve.cache import (CacheConfig, CachedResult, Coalescer,
+                               ResultCache, request_key)
 from repro.serve.engine import Completion, LMServer, Request
 from repro.serve.group import EngineGroup, RoutingPolicy
 from repro.serve.metrics import MetricsCollector
@@ -70,8 +80,12 @@ class SchedulerConfig:
     devices: Optional[Sequence] = None  # one replica per device
     replicas: Optional[int] = None      # colocated replicas (simulation)
     routing: Union[str, RoutingPolicy] = RoutingPolicy.LEAST_LOADED
+    # result cache + coalescing (None/False = off, True = defaults,
+    # dict/CacheConfig = explicit knobs)
+    cache: Union[None, bool, dict, CacheConfig] = None
 
     def __post_init__(self):
+        self.cache = CacheConfig.coerce(self.cache)
         try:
             self.policy = BackpressurePolicy(self.policy)
         except ValueError:
@@ -127,6 +141,7 @@ class AsyncScheduler:
                  config: Optional[SchedulerConfig] = None, *,
                  metrics: Optional[MetricsCollector] = None,
                  on_complete: Optional[Callable[[Completion], None]] = None,
+                 cache: Optional[ResultCache] = None,
                  **overrides):
         if config is None:
             config = SchedulerConfig(**overrides)
@@ -142,6 +157,16 @@ class AsyncScheduler:
                 routing=config.routing)
         self.server = self.group.replicas[0].server
         self.metrics = metrics if metrics is not None else MetricsCollector()
+        # result cache: an explicit instance (Server shares one across
+        # sessions and replicas) wins over the config's CacheConfig
+        if cache is not None:
+            self.cache = cache
+        elif config.cache is not None:
+            self.cache = ResultCache(config.cache)
+        else:
+            self.cache = None
+        self._coalescer = Coalescer(enabled=self.cache.cfg.coalesce) \
+            if self.cache is not None else None
         self._epoch = time.perf_counter()
         self._lock = threading.Lock()
         self._have_work = threading.Condition(self._lock)
@@ -153,10 +178,21 @@ class AsyncScheduler:
         self.n_submitted = 0
         self.n_rejected = 0
         self.n_shed = 0
+        self.n_cache_hits = 0
+        self.n_coalesced = 0
+        # completions minted off the pipeline (cache hits + resolved
+        # followers), merged into result()
+        self._extra: List[Completion] = []
+        # the run always gets the scheduler's own hooks; user callbacks
+        # (closed-loop generators chain onto the properties below) live in
+        # these slots so cache/coalescer bookkeeping can't be displaced
+        self._user_on_complete = on_complete
+        self._user_on_drop: Optional[Callable[[int], None]] = None
         self._run = self.group.open(pipeline_depth=config.pipeline_depth,
                                     metrics=self.metrics,
                                     clock=self._now,
-                                    on_complete=on_complete)
+                                    on_complete=self._complete_hook,
+                                    on_drop=self._drop_hook)
         self._batcher = threading.Thread(target=self._batch_loop, daemon=True)
         self._batcher_error: Optional[BaseException] = None
         self._started = False
@@ -166,22 +202,64 @@ class AsyncScheduler:
     def _now(self) -> float:
         return time.perf_counter() - self._epoch
 
-    # completion/drop hooks (closed-loop generators chain onto these)
+    # completion/drop hooks (closed-loop generators chain onto these).
+    # The GroupRun always calls the scheduler's internal hooks, which do
+    # cache fill + follower resolution and then forward to these user
+    # slots — so chaining can never displace the cache bookkeeping.
     @property
     def on_complete(self):
-        return self._run.on_complete
+        return self._user_on_complete
 
     @on_complete.setter
     def on_complete(self, cb):
-        self._run.on_complete = cb
+        self._user_on_complete = cb
 
     @property
     def on_drop(self):
-        return self._run.on_drop
+        return self._user_on_drop
 
     @on_drop.setter
     def on_drop(self, cb):
-        self._run.on_drop = cb
+        self._user_on_drop = cb
+
+    # -- cache/coalescer plumbing (run on the replica worker threads) --------
+    def _complete_hook(self, comp: Completion):
+        """Leader completed: fill the cache, mint follower completions,
+        then forward everything to the user callback."""
+        minted: List[Completion] = []
+        if self.cache is not None:
+            now = self._now()
+            key, followers = self._coalescer.resolve(comp.rid)
+            if key is not None:
+                entry = CachedResult.of(
+                    comp, replica=self.metrics.replica_of(comp.rid), now=now)
+                self.cache.put(key, entry, metrics=self.metrics)
+                for freq in followers:
+                    minted.append(entry.mint(freq.rid))
+                    self.metrics.on_complete([freq.rid], now)
+            if minted:
+                with self._lock:
+                    self._extra.extend(minted)
+        cb = self._user_on_complete
+        if cb is not None:
+            cb(comp)
+            for fc in minted:
+                cb(fc)
+
+    def _drop_hook(self, rid: int):
+        """Leader shed or dropped (MCT filter): its followers are dropped
+        with it — never independently — and the key is released so the
+        next identical request becomes a fresh leader."""
+        followers: List[Request] = []
+        if self._coalescer is not None:
+            _, followers = self._coalescer.fail(rid)
+            if followers:
+                self.metrics.on_cache("follower_drops", len(followers))
+        cb = self._user_on_drop
+        if cb is not None:
+            cb(rid)
+            for freq in followers:
+                cb(freq.rid)
 
     # -- public API ------------------------------------------------------------
     def start(self) -> "AsyncScheduler":
@@ -206,57 +284,100 @@ class AsyncScheduler:
             return self._depth_locked()
 
     def submit(self, req: Request, *, arrival: Optional[float] = None) -> bool:
-        """Offer a request; returns False when rejected by backpressure."""
+        """Offer a request; returns False when rejected by backpressure.
+
+        With a result cache configured, the content-addressed fast paths
+        run first, ahead of admission: a cache hit completes immediately
+        and an identical in-flight request adopts this one as a follower.
+        Neither consumes queue space, so neither can be rejected, shed, or
+        blocked — backpressure only ever acts on leaders."""
         self.start()                 # idempotent, lock-guarded
         now = self._now()
         shed_rid: Optional[int] = None
+        hit: Optional[Completion] = None
+        key: Optional[str] = None
         with self._lock:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
-            if self.cfg.policy == BackpressurePolicy.BLOCK:
-                while self._depth_locked() >= self.cfg.max_queue \
-                        and not self._closed and not self._pipeline_dead():
-                    self._space.wait(timeout=0.1)
-                if self._closed:
-                    # close() raced our wait; the batcher may already have
-                    # flushed and exited — appending now would lose the
-                    # request silently
-                    raise RuntimeError("scheduler is closed")
-                if self._pipeline_dead():
-                    # the batcher/device thread died, so queue space will
-                    # never free up — fail fast instead of wedging the
-                    # submitter (result() carries the root cause)
-                    raise RuntimeError("scheduler pipeline failed; "
-                                       "call result() for the cause")
-            elif self._depth_locked() >= self.cfg.max_queue:
-                if self.cfg.policy == BackpressurePolicy.REJECT:
-                    self.n_rejected += 1
-                    self.metrics.on_reject(req.rid, now)
-                    return False
-                # shed_oldest: evict from the aggregator buffer first (the
-                # overall oldest), then from the pending deque
-                victim = self._agg.evict_oldest(now)
-                if victim is None and self._pending:
-                    victim = self._pending.popleft()
-                if victim is not None:
-                    self.n_shed += 1
-                    self.metrics.on_shed(victim[1].rid, now)
-                    shed_rid = victim[1].rid
-            self._pending.append((req.rid, req))
-            self.n_submitted += 1
-            # arrival/admit recorded only once the request's fate is
-            # decided — a submit that raised on a close() race must not
-            # leave a phantom trace inflating the report
-            self.metrics.on_arrival(req.rid, arrival if arrival is not None
-                                    else now)
-            self.metrics.on_admit(req.rid, now)
-            self.metrics.note_queue_depth(self._depth_locked())
-            self._have_work.notify()
-        # user callback outside the non-reentrant lock: an on_drop that
-        # reads queue_depth or re-submits must not deadlock (the device
-        # thread already calls it unlocked — same contract)
-        if shed_rid is not None and self._run.on_drop is not None:
-            self._run.on_drop(shed_rid)
+            if self.cache is not None:
+                key = request_key(req)
+                entry = self.cache.get(key, now, metrics=self.metrics)
+                if entry is not None:
+                    hit = entry.mint(req.rid)
+                    self.n_submitted += 1
+                    self.n_cache_hits += 1
+                    self._extra.append(hit)
+                    self.metrics.on_arrival(req.rid, arrival
+                                            if arrival is not None else now)
+                    self.metrics.on_cache_hit(req.rid, now,
+                                              replica=entry.replica)
+                    self.metrics.on_complete([req.rid], now)
+                else:
+                    leader = self._coalescer.attach(key, req)
+                    if leader is not None:
+                        self.n_submitted += 1
+                        self.n_coalesced += 1
+                        self.metrics.on_arrival(
+                            req.rid, arrival if arrival is not None else now)
+                        self.metrics.on_coalesce(req.rid, leader, now)
+                        return True
+            if hit is None:
+                if self.cfg.policy == BackpressurePolicy.BLOCK:
+                    while self._depth_locked() >= self.cfg.max_queue \
+                            and not self._closed \
+                            and not self._pipeline_dead():
+                        self._space.wait(timeout=0.1)
+                    if self._closed:
+                        # close() raced our wait; the batcher may already
+                        # have flushed and exited — appending now would
+                        # lose the request silently
+                        raise RuntimeError("scheduler is closed")
+                    if self._pipeline_dead():
+                        # the batcher/device thread died, so queue space
+                        # will never free up — fail fast instead of
+                        # wedging the submitter (result() carries the
+                        # root cause)
+                        raise RuntimeError("scheduler pipeline failed; "
+                                           "call result() for the cause")
+                elif self._depth_locked() >= self.cfg.max_queue:
+                    if self.cfg.policy == BackpressurePolicy.REJECT:
+                        self.n_rejected += 1
+                        self.metrics.on_reject(req.rid, now)
+                        return False
+                    # shed_oldest: evict from the aggregator buffer first
+                    # (the overall oldest), then from the pending deque
+                    victim = self._agg.evict_oldest(now)
+                    if victim is None and self._pending:
+                        victim = self._pending.popleft()
+                    if victim is not None:
+                        self.n_shed += 1
+                        self.metrics.on_shed(victim[1].rid, now)
+                        shed_rid = victim[1].rid
+                self._pending.append((req.rid, req))
+                self.n_submitted += 1
+                # arrival/admit recorded only once the request's fate is
+                # decided — a submit that raised on a close() race must
+                # not leave a phantom trace inflating the report
+                self.metrics.on_arrival(req.rid, arrival
+                                        if arrival is not None else now)
+                self.metrics.on_admit(req.rid, now)
+                self.metrics.note_queue_depth(self._depth_locked())
+                if key is not None:
+                    # admitted leader: claim the key so identical requests
+                    # coalesce onto it until it completes or is shed
+                    self._coalescer.claim(key, req.rid)
+                    self.metrics.on_cache_miss(req.rid)
+                self._have_work.notify()
+        # user callbacks outside the non-reentrant lock: an on_complete/
+        # on_drop that reads queue_depth or re-submits must not deadlock
+        # (the device thread already calls them unlocked — same contract)
+        if hit is not None:
+            cb = self._user_on_complete
+            if cb is not None:
+                cb(hit)
+            return True
+        if shed_rid is not None:
+            self._drop_hook(shed_rid)
         return True
 
     def close(self):
@@ -280,10 +401,38 @@ class AsyncScheduler:
         if self._batcher_error is not None:
             raise RuntimeError("batcher thread failed") \
                 from self._batcher_error
+        with self._lock:
+            # cache hits + resolved followers never ran on a replica;
+            # merge them in (callers match by rid)
+            completions = completions + self._extra
         self._results = completions
         return self._results
 
+    def shutdown(self) -> None:
+        """close() + reap the batcher and every replica worker thread,
+        swallowing pipeline errors — the exception-path cleanup used by
+        the context manager, so a failed run never leaks the pipeline
+        threads. Use :meth:`result` when you want errors raised."""
+        try:
+            self.result()
+        except Exception:
+            pass
+
+    def __enter__(self) -> "AsyncScheduler":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is None:
+            self.result()
+        else:
+            # body raised: reap threads without masking the user's error
+            self.shutdown()
+        return False
+
     def report(self, *, offered_qps: Optional[float] = None):
+        if self.cache is not None:
+            self.metrics.note_cache_bytes(self.cache.bytes_resident,
+                                          len(self.cache))
         rep = self.metrics.report(offered_qps=offered_qps)
         rep.n_rejected = max(rep.n_rejected, self.n_rejected)
         rep.n_shed = max(rep.n_shed, self.n_shed)

@@ -19,8 +19,10 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
+from repro.serve.cache import (CacheConfig, CachedResult, ResultCache,
+                               request_key)
 from repro.serve.engine import (Completion, LMServer, Request,
                                 form_batch_groups)
 from repro.serve.group import EngineGroup, RoutingPolicy
@@ -53,6 +55,15 @@ class ServeConfig:
     Batching / admission (the AsyncScheduler knobs):
       ``target_batch``, ``deadline``, ``max_queue``, ``policy``
       (:class:`BackpressurePolicy` or its string value), ``pipeline_depth``.
+
+    Result caching (off by default — the stack is bit-identical to its
+    uncached behavior when ``cache`` is None):
+      ``cache``       — ``CacheConfig`` (or ``True`` for defaults / a
+                        kwargs dict) enabling the content-addressed
+                        result cache + in-flight coalescing; one
+                        :class:`~repro.serve.cache.ResultCache` instance
+                        is shared by every replica, ``serve()`` call, and
+                        live session of the built ``Server``.
     """
     model: Union[str, object] = "llama3.2-3b"
     reduced: bool = True
@@ -74,12 +85,18 @@ class ServeConfig:
     max_queue: int = 64
     policy: Union[str, BackpressurePolicy] = BackpressurePolicy.REJECT
     pipeline_depth: int = 2
+    # result cache + coalescing (None/False = off, True = defaults,
+    # dict/CacheConfig = explicit knobs)
+    cache: Union[None, bool, dict, CacheConfig] = None
+
+    def __post_init__(self):
+        self.cache = CacheConfig.coerce(self.cache)
 
     def scheduler_config(self, **overrides) -> SchedulerConfig:
         base = dict(target_batch=self.target_batch, deadline=self.deadline,
                     max_queue=self.max_queue, policy=self.policy,
                     pipeline_depth=self.pipeline_depth,
-                    routing=self.routing)
+                    routing=self.routing, cache=self.cache)
         base.update(overrides)
         return SchedulerConfig(**base)
 
@@ -95,6 +112,11 @@ class Server:
         self.cfg = cfg
         self.metrics = metrics if metrics is not None else MetricsCollector()
         self._session: Optional[AsyncScheduler] = None
+        # one ResultCache for the whole server: every serve() call, live
+        # session, and replica shares it, so a result computed anywhere
+        # serves hits everywhere
+        self.cache: Optional[ResultCache] = \
+            ResultCache(cfg.cache) if cfg.cache is not None else None
 
     # -- engine access --------------------------------------------------------
     @property
@@ -143,9 +165,30 @@ class Server:
         deterministically), ``mode="pipelined"`` returns completions
         bit-identical to ``mode="sync"``. Only throughput differs.
 
+        With a result cache configured (``ServeConfig.cache``), a
+        content-addressed pre-pass runs over the stream first: requests
+        whose key is already cached are served without executing
+        (``cache_hit``), later duplicates of an uncached key ride on the
+        first occurrence (``coalesced``), and only the remaining unique
+        leaders flow through the batch pipeline. TTL is judged against
+        each request's *logical* arrival time, so a seeded stream always
+        replays the same hit/miss/eviction sequence — and because minted
+        completions carry the leader's exact tokens, the cached run stays
+        bit-identical per rid to the uncached one.
+
         This method subsumes the deprecated ``run_pipelined(...)`` and
         ``LMServer.serve_stream(pipeline=True)`` entry points.
         """
+        if mode not in ("pipelined", "sync"):
+            raise ValueError(
+                f"mode must be 'pipelined' or 'sync', got {mode!r}")
+        if self.cache is None:
+            return self._execute_stream(requests, mode)
+        return self._serve_cached(requests, mode)
+
+    def _execute_stream(self, requests: Sequence[Request],
+                        mode: str) -> List[Completion]:
+        """The uncached replay path (exactly PR 2's ``serve`` body)."""
         groups = form_batch_groups(requests,
                                    target_batch=self.cfg.target_batch,
                                    deadline=self.cfg.deadline)
@@ -153,23 +196,81 @@ class Server:
             return self.group.run_groups(
                 groups, pipeline_depth=self.cfg.pipeline_depth,
                 metrics=self.metrics)
-        if mode == "sync":
-            eng = self.engine
-            out: List[Completion] = []
-            for rs in groups:
-                te0 = time.perf_counter()
-                pb = eng.prepare_batch(rs)
-                te1 = time.perf_counter()
-                comps = eng.execute_prepared(pb)
-                td1 = time.perf_counter()
-                rids = [r.rid for r in rs]
-                self.metrics.on_encode(rids, te0, te1)
-                self.metrics.on_device(rids, te1, td1, replica=0)
-                self.metrics.on_complete([c.rid for c in comps], td1)
-                out.extend(comps)
-            return out
-        raise ValueError(
-            f"mode must be 'pipelined' or 'sync', got {mode!r}")
+        eng = self.engine
+        out: List[Completion] = []
+        for rs in groups:
+            te0 = time.perf_counter()
+            pb = eng.prepare_batch(rs)
+            te1 = time.perf_counter()
+            comps = eng.execute_prepared(pb)
+            td1 = time.perf_counter()
+            rids = [r.rid for r in rs]
+            self.metrics.on_encode(rids, te0, te1)
+            self.metrics.on_device(rids, te1, td1, replica=0)
+            self.metrics.on_complete([c.rid for c in comps], td1)
+            out.extend(comps)
+        return out
+
+    def _serve_cached(self, requests: Sequence[Request],
+                      mode: str) -> List[Completion]:
+        """Content-addressed pre-pass + leader execution + cache fill.
+
+        The cache clock is the stream's logical arrival time (TTL replays
+        deterministically); metrics timestamps stay on the wall clock the
+        rest of the replay path uses.
+        """
+        coalesce = self.cache.cfg.coalesce
+        ttl = self.cache.cfg.ttl
+        hits: List = []                       # (req, entry) pairs
+        leaders: List[Request] = []
+        key_of: Dict[int, str] = {}           # leader rid -> content key
+        # key -> (leader rid, leader arrival) for this stream; a later
+        # duplicate only coalesces if its logical gap to the leader is
+        # within TTL — past that, the leader's result would already be
+        # stale, so the duplicate becomes a fresh leader
+        stream_leader: Dict[str, tuple] = {}
+        followers: Dict[int, List[Request]] = {}
+        for r in sorted(requests, key=lambda q: q.arrival):
+            key = request_key(r)
+            entry = self.cache.get(key, r.arrival, metrics=self.metrics)
+            if entry is not None:
+                hits.append((r, entry))
+                t = time.perf_counter()
+                self.metrics.on_cache_hit(r.rid, t, replica=entry.replica)
+                self.metrics.on_complete([r.rid], t)
+                continue
+            lead = stream_leader.get(key) if coalesce else None
+            if lead is not None and (ttl is None
+                                     or r.arrival - lead[1] <= ttl):
+                followers.setdefault(lead[0], []).append(r)
+                self.metrics.on_coalesce(r.rid, lead[0], time.perf_counter())
+                continue
+            stream_leader[key] = (r.rid, r.arrival)
+            key_of[r.rid] = key
+            leaders.append(r)
+            self.metrics.on_cache_miss(r.rid)
+        comps = self._execute_stream(leaders, mode) if leaders else []
+        done = {c.rid: c for c in comps}
+        out: List[Completion] = list(comps)
+        for r in leaders:
+            c = done.get(r.rid)
+            foll = followers.get(r.rid, [])
+            if c is None:
+                # leader was filtered out (MCT): its followers drop with it
+                if foll:
+                    self.metrics.on_cache("follower_drops", len(foll))
+                continue
+            entry = CachedResult.of(
+                c, replica=self.metrics.replica_of(c.rid), now=r.arrival)
+            self.cache.put(key_of[r.rid], entry, metrics=self.metrics)
+            t = time.perf_counter()
+            for f in foll:
+                out.append(entry.mint(f.rid))
+                self.metrics.on_complete([f.rid], t)
+        out.extend(entry.mint(r.rid) for r, entry in hits)
+        self.metrics.note_cache_bytes(self.cache.bytes_resident,
+                                      len(self.cache))
+        return out
 
     # -- live async serving ----------------------------------------------------
     def session(self, *, metrics: Optional[MetricsCollector] = None,
@@ -179,7 +280,8 @@ class Server:
         for this session only (e.g. ``policy="block"``)."""
         return AsyncScheduler(
             self.group, self.cfg.scheduler_config(**overrides),
-            metrics=metrics if metrics is not None else MetricsCollector())
+            metrics=metrics if metrics is not None else MetricsCollector(),
+            cache=self.cache)
 
     def submit(self, req: Request, **kw) -> bool:
         """Submit to the server's default live session (created lazily,
@@ -187,7 +289,7 @@ class Server:
         if self._session is None:
             self._session = AsyncScheduler(
                 self.group, self.cfg.scheduler_config(),
-                metrics=self.metrics)
+                metrics=self.metrics, cache=self.cache)
         return self._session.submit(req, **kw)
 
     def result(self) -> List[Completion]:
@@ -197,7 +299,26 @@ class Server:
         self._session = None        # sessions are one-shot; allow another
         return out
 
+    def close(self) -> None:
+        """Reap the default session's pipeline threads (idempotent,
+        swallows pipeline errors — use :meth:`result` to surface them).
+        Safe to call with no session open."""
+        s, self._session = self._session, None
+        if s is not None:
+            s.shutdown()
+
+    def __enter__(self) -> "Server":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        # whether the body raised or not, never leak the pipeline thread
+        self.close()
+        return False
+
     def report(self, *, offered_qps: Optional[float] = None) -> RunReport:
+        if self.cache is not None:
+            self.metrics.note_cache_bytes(self.cache.bytes_resident,
+                                          len(self.cache))
         return self.metrics.report(offered_qps=offered_qps)
 
 

@@ -14,12 +14,16 @@ Used by ``benchmarks/fig13_endtoend.py --replicas`` (host-device
 simulation sweep) and the replica-routing tests, where real accelerators
 per replica aren't available in the container.
 
-Outputs are deterministic functions of the request (rid + position), so
-bit-identity checks work across replica counts and routing policies.
+Outputs are deterministic functions of the request's *content* (prompt
+tokens + decode budget — never the rid), so bit-identity checks work
+across replica counts and routing policies, and a cached result minted
+for one rid is exactly what re-executing a content-equal request under a
+different rid would have produced.
 """
 from __future__ import annotations
 
 import time
+import zlib
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
@@ -80,26 +84,55 @@ class SimServer:
         return self.execute_prepared(self.prepare_batch(requests))
 
     def _tokens(self, r: Request) -> np.ndarray:
-        # deterministic in the request alone: identical across replicas,
-        # routing policies, and batch compositions (bit-identity anchor)
+        # deterministic in the request's CONTENT alone (never the rid):
+        # identical across replicas, routing policies, batch compositions,
+        # and rid renumbering — the bit-identity anchor that also makes
+        # result-cache substitution exact for content-equal requests
         n = r.max_new_tokens
-        return ((int(r.rid) * 1009 + np.arange(n, dtype=np.int64) * 31 + 7)
+        base = zlib.crc32(
+            np.ascontiguousarray(np.asarray(r.tokens, np.int64)).tobytes())
+        return ((int(base) * 1009 + n * 131
+                 + np.arange(n, dtype=np.int64) * 31 + 7)
                 % self.vocab).astype(np.int32)
 
 
 def sim_requests(n: int, *, max_new_tokens: int = 4, prompt_len: int = 8,
                  arrivals: Optional[np.ndarray] = None,
                  rid_base: int = 0, vocab: int = 256,
-                 skew: Optional[Sequence[int]] = None) -> List[Request]:
-    """Deterministic request stream for simulation runs; ``skew`` cycles
-    per-request decode lengths (e.g. ``(16, 1)`` alternates heavy/light)."""
-    rng = np.random.default_rng(rid_base + 7)
+                 skew: Optional[Sequence[int]] = None,
+                 unique_keys: int = 0, repeat_alpha: float = 0.0,
+                 content_seed: Optional[int] = None) -> List[Request]:
+    """Deterministic request stream for simulation runs.
+
+    ``skew`` cycles per-request decode lengths (e.g. ``(16, 1)`` alternates
+    heavy/light). ``unique_keys``/``repeat_alpha`` switch to repeat-heavy
+    traffic: contents drawn from ``unique_keys`` prototypes under
+    Zipf(``repeat_alpha``) popularity (cache studies). ``content_seed``
+    pins the content RNG independently of ``rid_base`` so a second wave of
+    fresh rids can replay the *same* key population (defaults to
+    ``rid_base + 7``, the original behavior).
+    """
+    rng = np.random.default_rng(content_seed if content_seed is not None
+                                else rid_base + 7)
+    protos: Optional[List[np.ndarray]] = None
+    choice: Optional[np.ndarray] = None
+    if unique_keys > 0:
+        from repro.serve.loadgen import zipf_probs
+        protos = [rng.integers(1, vocab, prompt_len).astype(np.int32)
+                  for _ in range(unique_keys)]
+        choice = rng.choice(unique_keys, size=n,
+                            p=zipf_probs(unique_keys, repeat_alpha))
     out = []
     for i in range(n):
-        mn = skew[i % len(skew)] if skew else max_new_tokens
+        # in prototype mode, decode length follows the prototype (not the
+        # stream position) so content-equal requests stay cache-equal
+        j = int(choice[i]) if choice is not None else i
+        mn = skew[j % len(skew)] if skew else max_new_tokens
+        toks = protos[j].copy() if protos is not None \
+            else rng.integers(1, vocab, prompt_len).astype(np.int32)
         out.append(Request(
             rid=rid_base + i,
-            tokens=rng.integers(1, vocab, prompt_len).astype(np.int32),
+            tokens=toks,
             max_new_tokens=int(mn),
             arrival=float(arrivals[i]) if arrivals is not None else 0.0))
     return out

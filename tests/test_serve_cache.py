@@ -1,0 +1,434 @@
+"""Result cache + coalescing: content addressing, bit-identity,
+single-flight semantics under backpressure, deterministic TTL/LRU,
+shared-cache accounting across replicas, and the hit+miss+coalesced
+accounting invariant."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serve import (AsyncScheduler, CacheConfig, CachedResult,
+                         Coalescer, Request, ResultCache, SchedulerConfig,
+                         ServeConfig, SimServer, build, request_key,
+                         sim_requests)
+
+
+def _req(rid, tokens, *, max_new=4, arrival=0.0):
+    return Request(rid=rid, tokens=np.asarray(tokens, np.int32),
+                   max_new_tokens=max_new, arrival=arrival)
+
+
+def _sim_server_cfg(replicas=1, *, cache=True, sim_kw=None, **kw):
+    sim_kw = dict(sim_kw or {})
+    return ServeConfig(replicas=replicas,
+                       cache=CacheConfig() if cache is True else cache,
+                       server_factory=lambda i: SimServer(**sim_kw), **kw)
+
+
+# -- content addressing -------------------------------------------------------
+
+def test_request_key_ignores_rid_and_arrival():
+    a = _req(1, [3, 5, 7], arrival=0.0)
+    b = _req(999, [3, 5, 7], arrival=42.0)
+    assert request_key(a) == request_key(b)
+
+
+def test_request_key_depends_on_content():
+    base = _req(1, [3, 5, 7], max_new=4)
+    assert request_key(base) != request_key(_req(1, [3, 5, 8], max_new=4))
+    assert request_key(base) != request_key(_req(1, [3, 5, 7], max_new=5))
+    assert request_key(base) != request_key(_req(1, [3, 5], max_new=4))
+
+
+def test_sim_tokens_are_content_derived():
+    # the bit-identity anchor for cache substitution: same content, any
+    # rid, same simulated output
+    srv = SimServer(host_ms_per_batch=0.0, device_ms_per_batch=0.0)
+    a, = srv.generate_batch([_req(1, [3, 5, 7])])
+    b, = srv.generate_batch([_req(888, [3, 5, 7])])
+    c, = srv.generate_batch([_req(1, [3, 5, 9])])
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert not np.array_equal(a.tokens, c.tokens)
+
+
+# -- ResultCache unit behavior ------------------------------------------------
+
+def test_ttl_expiry_is_judged_on_callers_clock():
+    cache = ResultCache(CacheConfig(ttl=10.0))
+    key = "k"
+    comp = SimServer(host_ms_per_batch=0, device_ms_per_batch=0) \
+        .generate_batch([_req(1, [2, 4])])[0]
+    cache.put(key, CachedResult.of(comp, now=0.0))
+    assert cache.get(key, 9.9) is not None          # fresh
+    cache.put(key, CachedResult.of(comp, now=0.0))  # reset stored_at
+    assert cache.get(key, 10.1) is None             # stale, evicted
+    assert key not in cache
+    s = cache.stats()
+    assert s["stale"] == 1 and s["entries"] == 0 and s["bytes_resident"] == 0
+
+
+def test_lru_eviction_is_deterministic():
+    comp = SimServer(host_ms_per_batch=0, device_ms_per_batch=0) \
+        .generate_batch([_req(1, [2, 4], max_new=4)])[0]
+    entry = lambda: CachedResult.of(comp, now=0.0)  # noqa: E731
+    # room for exactly two entries
+    cache = ResultCache(CacheConfig(max_bytes=2 * entry().nbytes))
+    cache.put("a", entry())
+    cache.put("b", entry())
+    assert cache.get("a", 0.0) is not None          # touch: b is now LRU
+    cache.put("c", entry())                         # evicts b, not a
+    assert "a" in cache and "c" in cache and "b" not in cache
+    assert cache.stats()["evictions"] == 1
+    # same sequence, same outcome: strict LRU has no tie-breaking noise
+    cache2 = ResultCache(CacheConfig(max_bytes=2 * entry().nbytes))
+    cache2.put("a", entry())
+    cache2.put("b", entry())
+    cache2.get("a", 0.0)
+    cache2.put("c", entry())
+    assert sorted(k for k in ("a", "b", "c") if k in cache2) \
+        == sorted(k for k in ("a", "b", "c") if k in cache)
+
+
+def test_oversized_entry_evicts_itself():
+    comp = SimServer(host_ms_per_batch=0, device_ms_per_batch=0) \
+        .generate_batch([_req(1, list(range(1, 9)), max_new=8)])[0]
+    cache = ResultCache(CacheConfig(max_bytes=1))
+    cache.put("k", CachedResult.of(comp, now=0.0))
+    assert len(cache) == 0 and cache.bytes_resident == 0
+
+
+# -- cached serve(): bit-identity + determinism -------------------------------
+
+def test_cached_pipelined_bit_identical_to_uncached_sync():
+    reqs = sim_requests(24, max_new_tokens=4, unique_keys=6,
+                        repeat_alpha=0.8, content_seed=11)
+    plain = build(_sim_server_cfg(cache=None))
+    baseline = {c.rid: c for c in plain.serve(reqs, mode="sync")}
+
+    cached = build(_sim_server_cfg(replicas=2, routing="sticky"))
+    # two waves: second replays the same key population with fresh rids,
+    # so it is served almost entirely from the cache
+    out1 = {c.rid: c for c in cached.serve(reqs, mode="pipelined")}
+    wave2 = sim_requests(24, max_new_tokens=4, rid_base=1000,
+                         unique_keys=6, repeat_alpha=0.8, content_seed=11)
+    base2 = {c.rid: c for c in plain.serve(wave2, mode="sync")}
+    out2 = {c.rid: c for c in cached.serve(wave2, mode="pipelined")}
+
+    assert set(out1) == set(baseline) and set(out2) == set(base2)
+    for rid, c in baseline.items():
+        np.testing.assert_array_equal(out1[rid].tokens, c.tokens)
+        assert out1[rid].truncated == c.truncated
+    for rid, c in base2.items():
+        np.testing.assert_array_equal(out2[rid].tokens, c.tokens)
+
+    rep = cached.report()
+    assert rep.cache["hits"] > 0                    # wave 2 hit the cache
+    assert rep.cache["hits"] + rep.cache["misses"] \
+        + rep.cache["coalesced"] == 48
+
+
+def test_cached_bit_identity_on_real_engine():
+    reqs = [Request(rid=i, tokens=np.array([2 + i % 3, 5, 9], np.int32),
+                    max_new_tokens=2, arrival=0.001 * i)
+            for i in range(9)]       # 3 distinct contents, 3x repeated
+    plain = build(ServeConfig(model="llama3.2-3b", max_seq=16,
+                              target_batch=4, deadline=0.01))
+    baseline = {c.rid: c for c in plain.serve(reqs, mode="sync")}
+    cached = build(ServeConfig(model="llama3.2-3b", max_seq=16,
+                               target_batch=4, deadline=0.01,
+                               routing="sticky", cache=True))
+    out = {c.rid: c for c in cached.serve(reqs, mode="pipelined")}
+    assert set(out) == set(baseline)
+    for rid, c in baseline.items():
+        np.testing.assert_array_equal(out[rid].tokens, c.tokens)
+        assert out[rid].truncated == c.truncated
+    rep = cached.report()
+    # 3 unique leaders executed; the other 6 coalesced onto them
+    assert rep.cache["misses"] == 3
+    assert rep.cache["coalesced"] == 6
+
+
+def test_cache_off_is_unchanged():
+    srv = build(_sim_server_cfg(cache=None))
+    reqs = sim_requests(16, max_new_tokens=4, unique_keys=4,
+                        repeat_alpha=1.0, content_seed=3)
+    srv.serve(reqs, mode="pipelined")
+    rep = srv.report()
+    assert rep.as_dict()["cache"] == {}
+    assert srv.cache is None
+
+
+def test_serve_ttl_uses_logical_arrival_time():
+    # TTL is judged against *logical* arrival time, not the microseconds
+    # the wall-clock replay actually takes
+    srv = build(_sim_server_cfg(cache=CacheConfig(ttl=1.0)))
+    srv.serve([_req(0, [3, 3], arrival=0.0)], mode="sync")
+    srv.serve([_req(1, [3, 3], arrival=5.0)], mode="sync")   # 5s later
+    rep = srv.report()
+    assert rep.cache["hits"] == 0
+    assert rep.cache["stale"] == 1
+    assert rep.cache["misses"] == 2
+
+    # within TTL the revisit is a hit
+    srv2 = build(_sim_server_cfg(cache=CacheConfig(ttl=1.0)))
+    srv2.serve([_req(0, [3, 3], arrival=0.0)], mode="sync")
+    srv2.serve([_req(1, [3, 3], arrival=0.5)], mode="sync")
+    assert srv2.report().cache["hits"] == 1
+
+    # same-stream duplicates do not coalesce across a logical gap > TTL:
+    # the leader's result would already be stale by then
+    srv3 = build(_sim_server_cfg(cache=CacheConfig(ttl=1.0)))
+    srv3.serve([_req(0, [3, 3], arrival=0.0),
+                _req(1, [3, 3], arrival=5.0),
+                _req(2, [3, 3], arrival=5.2)], mode="sync")
+    rep3 = srv3.report()
+    assert rep3.cache["misses"] == 2          # two leaders (0 and 1)
+    assert rep3.cache["coalesced"] == 1       # 2 rides on 1, within TTL
+
+
+# -- single-flight coalescing under backpressure ------------------------------
+
+def _gated_scheduler(gate, **cfg_kw):
+    """Scheduler over a SimServer whose host prepare blocks on ``gate`` —
+    keeps a leader in flight while more submissions arrive."""
+    sim = SimServer(host_ms_per_batch=1.0, device_ms_per_batch=0.0,
+                    sleep=lambda dt: gate.wait(timeout=5.0))
+    cfg = SchedulerConfig(cache=CacheConfig(), **cfg_kw)
+    return AsyncScheduler(sim, cfg)
+
+
+def _wait_for(pred, timeout=5.0):
+    import time
+    t0 = time.monotonic()
+    while not pred():
+        if time.monotonic() - t0 > timeout:
+            raise AssertionError("condition not reached")
+        time.sleep(0.001)
+
+
+def test_followers_resolve_with_their_leader():
+    gate = threading.Event()
+    sched = _gated_scheduler(gate, target_batch=1, deadline=0.001,
+                             max_queue=8, policy="block")
+    got = []
+    sched.on_complete = lambda c: got.append(c.rid)
+    sched.submit(_req(0, [9, 9]))                   # leader
+    _wait_for(lambda: sched.queue_depth == 0)       # batcher holds it
+    assert sched.submit(_req(1, [9, 9]))            # follower
+    assert sched.submit(_req(2, [9, 9]))            # follower
+    assert sched.n_coalesced == 2
+    gate.set()
+    outs = {c.rid: c for c in sched.result()}
+    assert set(outs) == {0, 1, 2}
+    for rid in (1, 2):
+        np.testing.assert_array_equal(outs[rid].tokens, outs[0].tokens)
+    assert sorted(got) == [0, 1, 2]                 # callbacks for all three
+    rep = sched.report()
+    assert rep.cache["coalesced"] == 2 and rep.cache["misses"] == 1
+
+
+def test_shed_leader_drops_followers_together():
+    gate = threading.Event()
+    sched = _gated_scheduler(gate, target_batch=1, deadline=0.001,
+                             max_queue=2, policy="shed_oldest")
+    dropped = []
+    sched.on_drop = dropped.append
+    sched.submit(_req(0, [1, 1]))                   # plug: batcher blocks on
+    _wait_for(lambda: sched.queue_depth == 0)       # its host prepare
+    sched.submit(_req(1, [9, 9]))                   # leader, queued
+    assert sched.submit(_req(2, [9, 9]))            # follower of 1
+    sched.submit(_req(3, [5, 5]))                   # queue now full
+    sched.submit(_req(4, [6, 6]))                   # sheds oldest == leader 1
+    gate.set()
+    outs = {c.rid for c in sched.result()}
+    assert outs == {0, 3, 4}                        # leader + follower gone
+    assert sorted(dropped) == [1, 2]                # dropped *together*
+    rep = sched.report()
+    assert rep.n_shed == 1
+    assert rep.cache["follower_drops"] == 1
+    # accounting: every accepted submission is a hit, miss, or coalesce
+    assert rep.cache["hits"] + rep.cache["misses"] \
+        + rep.cache["coalesced"] == sched.n_submitted == 5
+
+
+def test_followers_bypass_a_full_queue():
+    gate = threading.Event()
+    sched = _gated_scheduler(gate, target_batch=1, deadline=0.001,
+                             max_queue=2, policy="reject")
+    sched.submit(_req(0, [1, 1]))                   # plug
+    _wait_for(lambda: sched.queue_depth == 0)
+    sched.submit(_req(1, [9, 9]))                   # leader
+    sched.submit(_req(2, [5, 5]))                   # queue full
+    assert not sched.submit(_req(3, [6, 6]))        # unique: rejected
+    assert sched.submit(_req(4, [9, 9]))            # duplicate: coalesces
+    gate.set()
+    outs = {c.rid for c in sched.result()}
+    assert outs == {0, 1, 2, 4}
+    assert sched.n_rejected == 1 and sched.n_coalesced == 1
+
+
+def test_live_cache_hits_skip_the_pipeline():
+    sched = AsyncScheduler(
+        SimServer(host_ms_per_batch=0.0, device_ms_per_batch=0.0),
+        SchedulerConfig(target_batch=4, deadline=0.001,
+                        cache=CacheConfig()))
+    for i in range(4):
+        sched.submit(_req(i, [7, 7, 7]))
+    # drain wave 1 into the cache, then resubmit the same content
+    _wait_for(lambda: len(sched.cache) > 0)
+    for i in range(4, 8):
+        sched.submit(_req(i, [7, 7, 7]))
+    outs = {c.rid: c for c in sched.result()}
+    assert set(outs) == set(range(8))
+    rep = sched.report()
+    assert rep.cache["hits"] >= 1                   # wave 2 hit
+    assert rep.cache["hits"] + rep.cache["misses"] \
+        + rep.cache["coalesced"] == sched.n_submitted == 8
+    hit = [outs[i] for i in range(4, 8) if outs[i].prefill_ms == 0.0]
+    for c in hit:
+        np.testing.assert_array_equal(c.tokens, outs[0].tokens)
+
+
+# -- shared cache across replicas ---------------------------------------------
+
+def test_shared_cache_hit_accounting_across_replicas():
+    srv = build(_sim_server_cfg(replicas=2, routing="sticky",
+                                target_batch=4, deadline=1.0))
+    wave1 = sim_requests(16, max_new_tokens=4, unique_keys=16,
+                         repeat_alpha=0.0, content_seed=21)
+    wave2 = sim_requests(16, max_new_tokens=4, rid_base=100,
+                         unique_keys=16, repeat_alpha=0.0, content_seed=21)
+    srv.serve(wave1, mode="pipelined")
+    srv.serve(wave2, mode="pipelined")
+    rep = srv.report()
+    # wave 2 is an exact content replay: every request hits
+    assert rep.cache["hits"] == 16
+    # hits are attributed to the replica that produced the cached entry,
+    # and the per-replica attribution sums to the global counter
+    assert sum(s.cache_hits for s in rep.per_replica.values()) \
+        == rep.cache["hits"]
+    assert any(s.cache_hits > 0 and 0.0 < s.cache_hit_rate <= 1.0
+               for s in rep.per_replica.values())
+    # both replicas executed under sticky routing, so both contributed
+    assert sum(s.n_requests > 0 for s in rep.per_replica.values()) == 2
+
+
+# -- accounting invariant (property test) -------------------------------------
+
+def test_accounting_invariant_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(keys=st.lists(st.integers(0, 4), min_size=1, max_size=30))
+    def check(keys):
+        sched = AsyncScheduler(
+            SimServer(host_ms_per_batch=0.0, device_ms_per_batch=0.0),
+            SchedulerConfig(target_batch=4, deadline=0.001,
+                            max_queue=64, policy="block",
+                            cache=CacheConfig()))
+        for i, k in enumerate(keys):
+            assert sched.submit(_req(i, [k + 1, k + 1]))
+        outs = sched.result()
+        rep = sched.report()
+        assert rep.cache["hits"] + rep.cache["misses"] \
+            + rep.cache["coalesced"] == sched.n_submitted == len(keys)
+        assert len(outs) == len(keys)
+
+    check()
+
+
+# -- context managers / thread reaping ----------------------------------------
+
+def test_scheduler_context_manager_drains_cleanly():
+    with AsyncScheduler(
+            SimServer(host_ms_per_batch=0.0, device_ms_per_batch=0.0),
+            SchedulerConfig(target_batch=2, deadline=0.001)) as sched:
+        for i in range(4):
+            sched.submit(_req(i, [i + 1, 2]))
+    assert not sched._batcher.is_alive()
+    assert len(sched.result()) == 4
+
+
+def test_scheduler_context_manager_reaps_on_exception():
+    with pytest.raises(ValueError, match="boom"):
+        with AsyncScheduler(
+                SimServer(host_ms_per_batch=0.5, device_ms_per_batch=0.5),
+                SchedulerConfig(target_batch=2, deadline=0.001)) as sched:
+            sched.submit(_req(0, [3, 3]))
+            raise ValueError("boom")
+    assert not sched._batcher.is_alive()            # no leaked pipeline
+
+
+def test_server_context_manager_reaps_default_session():
+    with pytest.raises(ValueError, match="boom"):
+        with build(_sim_server_cfg(cache=None)) as srv:
+            srv.submit(_req(0, [3, 3]))
+            sched = srv._session
+            raise ValueError("boom")
+    assert not sched._batcher.is_alive()
+    assert srv._session is None                     # close() is idempotent
+    srv.close()
+
+
+def test_run_groups_reaps_workers_when_prepare_raises():
+    class ExplodingSim(SimServer):
+        def __init__(self):
+            super().__init__(host_ms_per_batch=0.0, device_ms_per_batch=0.0)
+            self.n_prepared = 0
+
+        def prepare_batch(self, requests):
+            self.n_prepared += 1
+            if self.n_prepared > 1:
+                raise RuntimeError("host encode failed")
+            return super().prepare_batch(requests)
+
+    srv = build(ServeConfig(server_factory=lambda i: ExplodingSim(),
+                            target_batch=2, deadline=1.0))
+    reqs = sim_requests(8, max_new_tokens=2)
+    n0 = threading.active_count()
+    with pytest.raises(RuntimeError, match="host encode failed"):
+        srv.serve(reqs, mode="pipelined")
+    _wait_for(lambda: threading.active_count() <= n0)
+
+
+# -- loadgen repeat mode ------------------------------------------------------
+
+def test_workload_zipf_reuse_bounds_key_population():
+    from repro.serve import SyntheticWorkload, zipf_probs
+    wl = SyntheticWorkload(prompt_len=6, seed=3, unique_keys=5,
+                           repeat_alpha=1.0)
+    reqs = wl.build(64)
+    keys = {request_key(r) for r in reqs}
+    assert 1 <= len(keys) <= 5
+    # seeded: same workload, same stream
+    keys2 = [request_key(r) for r in SyntheticWorkload(
+        prompt_len=6, seed=3, unique_keys=5, repeat_alpha=1.0).build(64)]
+    assert keys2 == [request_key(r) for r in reqs]
+    # default stays every-request-unique
+    uniq = SyntheticWorkload(prompt_len=6, seed=3).build(64)
+    assert len({request_key(r) for r in uniq}) == 64
+    # zipf weights: normalised, head-heavy for alpha > 0
+    p = zipf_probs(5, 1.0)
+    assert p[0] > p[-1] and abs(p.sum() - 1.0) < 1e-12
+    assert np.allclose(zipf_probs(4, 0.0), 0.25)
+
+
+def test_sim_requests_content_seed_replays_key_population():
+    a = sim_requests(20, unique_keys=4, repeat_alpha=0.5, content_seed=9)
+    b = sim_requests(20, rid_base=500, unique_keys=4, repeat_alpha=0.5,
+                     content_seed=9)
+    assert [request_key(r) for r in a] == [request_key(r) for r in b]
+    assert {r.rid for r in a}.isdisjoint({r.rid for r in b})
+
+
+def test_coalescer_disabled_still_tracks_cache_fill():
+    co = Coalescer(enabled=False)
+    r = _req(0, [1, 2])
+    key = request_key(r)
+    assert co.attach(key, _req(1, [1, 2])) is None
+    co.claim(key, 0)
+    k, followers = co.resolve(0)
+    assert k == key and followers == []
+    assert co.in_flight() == 0
