@@ -1,0 +1,197 @@
+"""Capacity sweep: static configurations vs the adaptive controller under
+phase-shifting load, priced through the paper's deployment costs.
+
+The paper's Tables 2–3 argument is that deployment economics hinge on the
+host/accelerator *balance*: an imbalanced box (weak host, strong FPGA)
+wastes the accelerator and can cost more per query than the CPU baseline.
+PR 2 reproduced the imbalance plateau; this harness closes the loop with
+the capacity subsystem (``repro.capacity``):
+
+For each simulated box shape (``SIM_PROFILES``: ``weak_host`` = the
+f1.2xlarge-style 8-vCPU host, ``balanced`` = the c5.12xlarge-style
+48-vCPU host), drive the same phase-shifting open-loop load
+(``PhasedOpenLoopGen``) through
+
+- a **static grid** of hand-picked batch-bucket targets at the full
+  replica count — the best point is the hand-tuned optimum an operator
+  would converge to offline, and
+- one **controlled** run starting from the *worst* static configuration
+  with the :class:`~repro.capacity.CapacityController` attached — no
+  manual retuning.
+
+Recorded per config: the controller's recovered fraction of the
+hand-tuned optimum throughput (acceptance bar: >= 0.8 on both box
+shapes), its bottleneck diagnosis history, and a
+:class:`~repro.capacity.CostReport` row per configuration — measured
+throughput priced to $/1k-queries, where the controlled run is charged
+only for its time-weighted mean *active* replicas (a parked replica can
+be reassigned or powered down). The ``capacity`` section of
+``BENCH_endtoend.json`` carries all of it.
+
+Run directly (``--smoke`` shrinks the load for CI):
+
+    PYTHONPATH=src python benchmarks/fig14_capacity.py [--smoke]
+"""
+import time
+
+try:
+    from benchmarks.common import emit
+except ModuleNotFoundError:     # run as a file: benchmarks/fig14_capacity.py
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.common import emit
+
+# static grid of batch-bucket targets (the operator's hand-tuning axis);
+# the controlled run starts from the first (worst) entry
+BATCH_GRID = (4, 8, 16, 32)
+REPLICAS = 4
+MAX_QUEUE = 64
+
+# phase-shifting offered load per box shape: (duration_s, qps) — a ramp
+# the static points can't follow and the controller must re-diagnose
+PHASES = {
+    "weak_host": [(0.6, 800.0), (1.2, 2400.0), (0.6, 1600.0)],
+    "balanced": [(0.6, 1000.0), (1.2, 3000.0), (0.6, 2000.0)],
+}
+
+# structured points for the BENCH_endtoend.json "capacity" section
+CAPACITY_POINTS = []
+
+
+def _session(profile, *, target_batch, capacity=None):
+    from repro.serve import ServeConfig, SimServer, build
+    cfg = ServeConfig(
+        replicas=REPLICAS, routing="least_loaded",
+        target_batch=target_batch, deadline=0.01,
+        max_queue=MAX_QUEUE, policy="shed_oldest",
+        capacity=capacity,
+        server_factory=lambda i: SimServer.from_profile(profile))
+    return build(cfg).session()
+
+
+def _drive(sched, gen):
+    """Drive the phased load, drain, return (qps, completions, report)."""
+    t0 = time.perf_counter()
+    gen.drive(sched)
+    outs = sched.result()
+    dt = time.perf_counter() - t0
+    rep = sched.report(offered_qps=gen.mean_qps)
+    return len(outs) / dt, outs, rep
+
+
+def capacity_sweep(profiles=("weak_host", "balanced"), *, smoke=False):
+    from repro.capacity import CapacityConfig, CostReport
+    from repro.serve import PhasedOpenLoopGen, SyntheticWorkload
+
+    scale = 0.25 if smoke else 1.0
+    grid = (BATCH_GRID[0], BATCH_GRID[-1]) if smoke else BATCH_GRID
+    report = CostReport()
+    for profile in profiles:
+        phases = [(d * scale, q) for d, q in PHASES[profile]]
+        workload = SyntheticWorkload(prompt_len=8, max_new_tokens=4, seed=3)
+
+        # hand-tuned optimum: best static batch target at full replicas
+        static = {}
+        for tb in grid:
+            gen = PhasedOpenLoopGen(workload, phases, seed=14)
+            qps, _, _ = _drive(_session(profile, target_batch=tb), gen)
+            static[tb] = qps
+        best_tb = max(static, key=static.get)
+        best_qps = static[best_tb]
+
+        # controlled: start from the WORST static point, let the
+        # controller re-balance online (no manual retuning)
+        cap = CapacityConfig(window_s=0.05 if smoke else 0.1, confirm=2,
+                             min_batch=grid[0], max_batch=grid[-1],
+                             min_queue=16, max_queue=256)
+        gen = PhasedOpenLoopGen(workload, phases, seed=14)
+        ctl_qps, _, rep = _drive(
+            _session(profile, target_batch=grid[0], capacity=cap), gen)
+        recovered = ctl_qps / best_qps if best_qps > 0 else 0.0
+        mean_active = float(rep.capacity.get("mean_active_replicas",
+                                             REPLICAS))
+
+        # price the measured numbers through the paper's unit costs: the
+        # static optimum pays for all replicas all the time, the
+        # controlled run only for its mean active set
+        srow = report.add(f"{profile}/static_tb{best_tb}", host=profile,
+                          replicas=REPLICAS, achieved_qps=best_qps)
+        crow = report.add(f"{profile}/controlled", host=profile,
+                          replicas=mean_active, achieved_qps=ctl_qps)
+        point = {
+            "profile": profile,
+            "phases": phases,
+            "static_qps_by_batch": {str(k): v for k, v in static.items()},
+            "best_static_batch": best_tb,
+            "best_static_qps": best_qps,
+            "controlled_qps": ctl_qps,
+            "recovered_fraction": recovered,
+            "diagnosis": rep.capacity.get("diagnosis"),
+            "diagnosis_history": rep.capacity.get("history", []),
+            "n_controller_actions": rep.capacity.get("n_actions", 0),
+            "final_knobs": rep.capacity.get("final", {}),
+            "mean_active_replicas": mean_active,
+            "static_usd_per_1k": srow.usd_per_1k,
+            "controlled_usd_per_1k": crow.usd_per_1k,
+        }
+        CAPACITY_POINTS.append(point)
+        emit(f"fig14_{profile}_static", 1e6 / max(best_qps, 1e-9),
+             f"best_tb={best_tb} qps={best_qps:.0f} "
+             f"${srow.usd_per_1k:.5f}/1k", **{
+                 k: point[k] for k in ("profile", "best_static_batch",
+                                       "best_static_qps",
+                                       "static_qps_by_batch",
+                                       "static_usd_per_1k")})
+        emit(f"fig14_{profile}_controlled", 1e6 / max(ctl_qps, 1e-9),
+             f"qps={ctl_qps:.0f} recovered={recovered:.2f} "
+             f"diag={point['diagnosis']} "
+             f"active={mean_active:.2f}/{REPLICAS} "
+             f"${crow.usd_per_1k:.5f}/1k", **point)
+    CAPACITY_POINTS.append({"cost_report": report.as_dict()})
+    return report
+
+
+def run():
+    capacity_sweep()
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    from benchmarks import common
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrunk load (CI): shorter phases, 2-point grid")
+    ap.add_argument("--profiles", nargs="+", default=None,
+                    metavar="NAME", help="box shapes to sweep "
+                    "(default: weak_host balanced)")
+    ap.add_argument("--json", nargs="?", const="BENCH_endtoend.json",
+                    default="BENCH_endtoend.json", metavar="PATH",
+                    help="merge structured results into PATH (default: "
+                         "BENCH_endtoend.json)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    capacity_sweep(tuple(args.profiles) if args.profiles
+                   else ("weak_host", "balanced"), smoke=args.smoke)
+    payload = {"suites": ["fig14"], "failed": [],
+               "results": common.RESULTS, "capacity": CAPACITY_POINTS}
+    try:
+        # merge into an existing run (CI writes fig13's sweeps first,
+        # then adds the capacity section on top)
+        with open(args.json) as f:
+            prev = json.load(f)
+        payload["suites"] = sorted(set(prev.get("suites", [])) | {"fig14"})
+        payload["failed"] = prev.get("failed", [])
+        payload["results"] = prev.get("results", []) + common.RESULTS
+        for key in ("cache",):
+            if key in prev:
+                payload[key] = prev[key]
+        payload["capacity"] = prev.get("capacity", []) + CAPACITY_POINTS
+    except (OSError, ValueError):
+        pass
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2)

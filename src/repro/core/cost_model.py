@@ -14,6 +14,41 @@ from typing import Dict, List
 
 HOURS_PER_YEAR = 24 * 365
 
+# paper Table 2 cloud unit prices ($/hour), named so the serving-layer
+# cost report prices measured throughput through the same numbers
+AWS_C5_12XLARGE_USD_H = 1.452     # 48 vCPUs, CPU-only baseline
+AWS_F1_2XLARGE_USD_H = 1.2266     # 8 vCPUs + 1 FPGA
+AZURE_F48SV2_USD_H = 1.2084       # 48 vCPUs
+AZURE_NP10S_USD_H = 1.0411        # 10 vCPUs + 1 FPGA
+
+
+def aws_host_usd_per_hour(vcpus: int) -> float:
+    """Host-only $/hour for a ``vcpus``-core box, pro-rated from the
+    c5.12xlarge (48 vCPUs) — the paper's CPU price anchor."""
+    return AWS_C5_12XLARGE_USD_H * (vcpus / 48.0)
+
+
+def aws_accel_usd_per_hour() -> float:
+    """Accelerator-only $/hour: the f1.2xlarge price minus its 8-vCPU
+    host share — what one attached FPGA costs on top of whatever host
+    feeds it."""
+    return AWS_F1_2XLARGE_USD_H - aws_host_usd_per_hour(8)
+
+
+def usd_per_hour(host_usd_h: float, accel_usd_h: float,
+                 replicas: float) -> float:
+    """$/hour of one host feeding ``replicas`` accelerators (fractional
+    replicas = time-weighted mean of an adaptive active set)."""
+    return host_usd_h + replicas * accel_usd_h
+
+
+def usd_per_1k_queries(usd_h: float, qps: float) -> float:
+    """Measured steady-state throughput -> cost per 1000 queries (the
+    paper's Tables 2–3 comparison, per measured configuration)."""
+    if qps <= 0:
+        return float("inf")
+    return usd_h / (qps * 3.6)        # qps * 3600 queries/h / 1000
+
 
 @dataclass(frozen=True)
 class Deployment:
@@ -52,14 +87,14 @@ def table2() -> List[Deployment]:
         Deployment("On-Premises / DE + ERBIUM (Alveo U50)",
                    "CPU + Alveo U50", _FPGA_SERVERS, 13_000, vcpus=48),
         Deployment("AWS / Original Domain Explorer", "c5.12xlarge",
-                   _SERVERS, 1.452, cloud=True, vcpus=48),
+                   _SERVERS, AWS_C5_12XLARGE_USD_H, cloud=True, vcpus=48),
         Deployment("AWS / DE + ERBIUM", "f1.2xlarge",
-                   int(_FPGA_SERVERS * _AWS_RATIO), 1.2266, cloud=True,
+                   int(_FPGA_SERVERS * _AWS_RATIO), AWS_F1_2XLARGE_USD_H, cloud=True,
                    vcpus=8),
         Deployment("Azure / Original Domain Explorer", "F48s v2",
-                   _SERVERS, 1.2084, cloud=True, vcpus=48),
+                   _SERVERS, AZURE_F48SV2_USD_H, cloud=True, vcpus=48),
         Deployment("Azure / DE + ERBIUM", "NP10s",
-                   int(round(_FPGA_SERVERS * _AZ_RATIO)), 1.0411, cloud=True,
+                   int(round(_FPGA_SERVERS * _AZ_RATIO)), AZURE_NP10S_USD_H, cloud=True,
                    vcpus=10),
     ]
 
@@ -75,14 +110,14 @@ def table3() -> List[Deployment]:
         Deployment("On-Premises / DE + ERBIUM + RS (U50)",
                    "CPU + Alveo U50", _FPGA_SERVERS, 13_000, vcpus=48),
         Deployment("AWS / Original DE + Route Scoring", "c5.12xlarge",
-                   _SERVERS + 80, 1.452, cloud=True, vcpus=48),
+                   _SERVERS + 80, AWS_C5_12XLARGE_USD_H, cloud=True, vcpus=48),
         Deployment("AWS / DE + ERBIUM + RS", "f1.2xlarge",
-                   int(_FPGA_SERVERS * _AWS_RATIO), 1.2266, cloud=True,
+                   int(_FPGA_SERVERS * _AWS_RATIO), AWS_F1_2XLARGE_USD_H, cloud=True,
                    vcpus=8),
         Deployment("Azure / Original DE + Route Scoring", "F48s v2",
-                   _SERVERS + 80, 1.2084, cloud=True, vcpus=48),
+                   _SERVERS + 80, AZURE_F48SV2_USD_H, cloud=True, vcpus=48),
         Deployment("Azure / DE + ERBIUM + RS", "NP10s",
-                   int(round(_FPGA_SERVERS * _AZ_RATIO)), 1.0411, cloud=True,
+                   int(round(_FPGA_SERVERS * _AZ_RATIO)), AZURE_NP10S_USD_H, cloud=True,
                    vcpus=10),
     ]
 

@@ -17,44 +17,67 @@ Modules:
                   per-replica host-encode/device-execute pipelines
 - ``scheduler`` — AsyncScheduler (bounded admission, BackpressurePolicy
                   REJECT/SHED_OLDEST/BLOCK), deprecated run_pipelined shim
-- ``cache``     — content-addressed ResultCache (TTL + byte-bounded LRU)
-                  and single-flight Coalescer; enable via
-                  ``ServeConfig(cache=CacheConfig(...))`` (default off)
+- ``cache``     — content-addressed ResultCache (TTL + byte-bounded LRU,
+                  optional negative caching of MCT-filtered verdicts) and
+                  single-flight Coalescer with shed-leader promotion;
+                  enable via ``ServeConfig(cache=CacheConfig(...))``
+                  (default off)
+- ``capacity``  — BottleneckMonitor (host/device/admission-bound
+                  diagnosis with hysteresis), CapacityController
+                  (adaptive batch-target / replica-set / AIMD admission
+                  control), CostReport ($/1k-queries through the paper's
+                  deployment prices); enable via
+                  ``ServeConfig(capacity=CapacityConfig(...))``
+                  (default off)
 - ``sim``       — SimServer: wall-clock host/device cost simulation for
                   replica-scaling studies without real accelerators
-- ``loadgen``   — open-loop (Poisson) / closed-loop (fixed concurrency)
-                  seeded load generators, optional Zipfian key-reuse
+                  (``SIM_PROFILES`` name the paper's box shapes)
+- ``loadgen``   — open-loop (Poisson, optionally phase-shifting) /
+                  closed-loop (fixed concurrency) seeded load generators,
+                  optional Zipfian key-reuse
 - ``metrics``   — per-request latency breakdown, device-idle-fraction,
-                  per-replica queue depth / idle / routing / cache counters
+                  per-replica queue depth / idle / routing / cache
+                  counters, cumulative SignalSnapshot windows for the
+                  capacity subsystem
 """
 from repro.serve.cache import (CacheConfig, CachedResult, Coalescer,
-                               ResultCache, request_key)
+                               NegativeResult, ResultCache, request_key)
+from repro.serve.capacity import (Bottleneck, BottleneckMonitor,
+                                  CapacityConfig, CapacityController,
+                                  CapacitySignals, ControllerAction,
+                                  CostReport)
 from repro.serve.engine import (Completion, LMServer, PreparedBatch,
                                 Request, form_batch_groups)
 from repro.serve.group import (EngineGroup, GroupRun, Replica,
                                RoutingPolicy, batch_work)
 from repro.serve.loadgen import (ClosedLoopGen, OpenLoopGen,
-                                 SyntheticWorkload, poisson_arrivals,
-                                 uniform_arrivals, zipf_probs)
+                                 PhasedOpenLoopGen, SyntheticWorkload,
+                                 poisson_arrivals, uniform_arrivals,
+                                 zipf_probs)
 from repro.serve.metrics import (LatencyStats, MetricsCollector,
-                                 ReplicaStats, RequestTrace, RunReport)
+                                 ReplicaStats, RequestTrace, RunReport,
+                                 SignalSnapshot)
 from repro.serve.scheduler import (AsyncScheduler, BackpressurePolicy,
                                    SchedulerConfig, run_pipelined)
 from repro.serve.server import ServeConfig, Server, build
-from repro.serve.sim import SimServer, sim_requests
+from repro.serve.sim import SIM_PROFILES, SimProfile, SimServer, sim_requests
 
 __all__ = [
-    "CacheConfig", "CachedResult", "Coalescer", "ResultCache",
-    "request_key",
+    "CacheConfig", "CachedResult", "Coalescer", "NegativeResult",
+    "ResultCache", "request_key",
+    "Bottleneck", "BottleneckMonitor", "CapacityConfig",
+    "CapacityController", "CapacitySignals", "ControllerAction",
+    "CostReport",
     "Completion", "LMServer", "PreparedBatch", "Request",
     "form_batch_groups",
     "EngineGroup", "GroupRun", "Replica", "RoutingPolicy", "batch_work",
-    "ClosedLoopGen", "OpenLoopGen", "SyntheticWorkload",
+    "ClosedLoopGen", "OpenLoopGen", "PhasedOpenLoopGen",
+    "SyntheticWorkload",
     "poisson_arrivals", "uniform_arrivals", "zipf_probs",
     "LatencyStats", "MetricsCollector", "ReplicaStats", "RequestTrace",
-    "RunReport",
+    "RunReport", "SignalSnapshot",
     "AsyncScheduler", "BackpressurePolicy", "SchedulerConfig",
     "run_pipelined",
     "ServeConfig", "Server", "build",
-    "SimServer", "sim_requests",
+    "SIM_PROFILES", "SimProfile", "SimServer", "sim_requests",
 ]

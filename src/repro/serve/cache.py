@@ -77,14 +77,26 @@ class CacheConfig:
     / ``SchedulerConfig.cache``; ``None`` keeps caching fully off and the
     serving stack bit-identical to its uncached behavior).
 
-    ``max_bytes`` — resident-size bound; strict LRU eviction above it.
-    ``ttl``       — seconds (in the caller's clock) before an entry goes
-                    stale; ``None`` disables expiry.
-    ``coalesce``  — single-flight dedup of identical in-flight requests.
+    ``max_bytes``       — resident-size bound; strict LRU eviction above it.
+    ``ttl``             — seconds (in the caller's clock) before an entry
+                          goes stale; ``None`` disables expiry.
+    ``coalesce``        — single-flight dedup of identical in-flight
+                          requests.
+    ``negative_ttl``    — seconds to remember that a content key was
+                          MCT-*filtered* (dropped by the engine without a
+                          completion), so the same doomed content doesn't
+                          re-encode and re-execute on its next arrival;
+                          ``None`` disables negative caching.
+    ``promote_on_shed`` — when ``shed_oldest`` evicts a coalescing leader,
+                          promote its first follower to leader so the
+                          flight survives and only one request's worth of
+                          work is shed.
     """
     max_bytes: int = 64 << 20
     ttl: Optional[float] = None
     coalesce: bool = True
+    negative_ttl: Optional[float] = None
+    promote_on_shed: bool = True
 
     @classmethod
     def coerce(cls, value: Union[None, bool, dict, "CacheConfig"]
@@ -133,6 +145,18 @@ class CachedResult:
                           truncated=self.truncated)
 
 
+@dataclass
+class NegativeResult:
+    """A remembered *filtered* verdict: the engine's MCT feasibility check
+    dropped this content without producing a completion, so re-submitting
+    the same content within ``negative_ttl`` is doomed — the scheduler
+    drops it at submit time, spending zero queue space, host encode, or
+    device time. Lives in the same LRU as positive entries (a later real
+    ``put`` under the key replaces it)."""
+    stored_at: float
+    nbytes: int = _ENTRY_OVERHEAD
+
+
 class ResultCache:
     """Thread-safe content-addressed completion cache with TTL + strict
     byte-bounded LRU eviction. Shared across replicas (one instance per
@@ -151,24 +175,29 @@ class ResultCache:
         self._entries: "OrderedDict[str, CachedResult]" = OrderedDict()
         self.bytes_resident = 0
         self._counts = {"hits": 0, "misses": 0, "stale": 0,
-                        "evictions": 0, "stores": 0}
+                        "evictions": 0, "stores": 0,
+                        "negative_hits": 0, "negative_stores": 0}
 
     def __len__(self) -> int:
         with self._lock:
             return len(self._entries)
 
     def get(self, key: str, now: float, *,
-            metrics=None) -> Optional[CachedResult]:
+            metrics=None) -> Union[None, CachedResult, NegativeResult]:
         """Look up ``key`` at time ``now`` (caller's clock). Returns the
-        entry (touching its LRU position) or None on miss/TTL expiry.
-        Misses are counted internally only — the caller decides whether a
-        miss turns into an admitted leader (see AsyncScheduler.submit)."""
+        entry (touching its LRU position) or None on miss/TTL expiry; a
+        :class:`NegativeResult` means the content is known-filtered (its
+        TTL is ``negative_ttl``). Misses are counted internally only — the
+        caller decides whether a miss turns into an admitted leader (see
+        AsyncScheduler.submit)."""
         with self._lock:
             e = self._entries.get(key)
             if e is None:
                 self._counts["misses"] += 1
                 return None
-            if self.cfg.ttl is not None and now - e.stored_at > self.cfg.ttl:
+            negative = isinstance(e, NegativeResult)
+            ttl = self.cfg.negative_ttl if negative else self.cfg.ttl
+            if ttl is not None and now - e.stored_at > ttl:
                 del self._entries[key]
                 self.bytes_resident -= e.nbytes
                 self._counts["stale"] += 1
@@ -178,7 +207,7 @@ class ResultCache:
                                              len(self._entries))
                 return None
             self._entries.move_to_end(key)
-            self._counts["hits"] += 1
+            self._counts["negative_hits" if negative else "hits"] += 1
             return e
 
     def put(self, key: str, entry: CachedResult, *, metrics=None) -> None:
@@ -203,6 +232,35 @@ class ResultCache:
                     metrics.on_cache("evictions", evicted)
                 metrics.note_cache_bytes(self.bytes_resident,
                                          len(self._entries))
+
+    def put_negative(self, key: str, now: float, *, metrics=None) -> bool:
+        """Remember that ``key`` was MCT-filtered. No-op (returns False)
+        unless ``negative_ttl`` is configured; shares the LRU/byte bound
+        with positive entries."""
+        if self.cfg.negative_ttl is None:
+            return False
+        with self._lock:
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self.bytes_resident -= old.nbytes
+            e = NegativeResult(stored_at=now)
+            self._entries[key] = e
+            self.bytes_resident += e.nbytes
+            self._counts["negative_stores"] += 1
+            evicted = 0
+            while self.bytes_resident > self.cfg.max_bytes and self._entries:
+                _, old = self._entries.popitem(last=False)
+                self.bytes_resident -= old.nbytes
+                evicted += 1
+            if evicted:
+                self._counts["evictions"] += evicted
+            if metrics is not None:
+                metrics.on_cache("negative_stores")
+                if evicted:
+                    metrics.on_cache("evictions", evicted)
+                metrics.note_cache_bytes(self.bytes_resident,
+                                         len(self._entries))
+        return True
 
     def __contains__(self, key: str) -> bool:
         with self._lock:
@@ -272,6 +330,27 @@ class Coalescer:
         drop with it). The key is released so the next identical request
         becomes a fresh leader."""
         return self._retire(rid)
+
+    def promote(self, rid: int) -> Optional[Request]:
+        """Leader ``rid`` is about to be shed: promote its first follower
+        to flight leader so the flight survives and only the old leader's
+        single request is lost. Returns the promoted :class:`Request`
+        (the caller re-admits it in the shed leader's place) or None when
+        ``rid`` leads no flight / has no followers (the caller then sheds
+        the whole flight via :meth:`fail`)."""
+        with self._lock:
+            key = self._key_of.get(rid)
+            if key is None:
+                return None
+            flight = self._flights.get(key)
+            if flight is None or flight[0] != rid or not flight[1]:
+                return None
+            followers = flight[1]
+            promoted = followers.pop(0)
+            self._flights[key] = (promoted.rid, followers)
+            self._key_of[promoted.rid] = key
+            del self._key_of[rid]
+            return promoted
 
     def in_flight(self) -> int:
         with self._lock:

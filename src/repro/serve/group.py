@@ -179,6 +179,9 @@ class GroupRun:
         self._outstanding = [0] * len(self._workers)
         self._rr = 0
         self._started = False
+        # capacity control: replicas [0, _active) receive new dispatches;
+        # parked replicas keep draining what they already hold
+        self._active = len(self._workers)
 
     # -- hooks (closed-loop generators chain onto these) ---------------------
     @property
@@ -211,6 +214,22 @@ class GroupRun:
         with self._lock:
             return list(self._outstanding)
 
+    @property
+    def n_active(self) -> int:
+        """Replicas currently receiving new dispatches."""
+        with self._lock:
+            return self._active
+
+    def set_active(self, n: int) -> int:
+        """Activate/park replicas: new batches route only to replicas
+        ``[0, n)``. Parked replicas drain their pipelines but attract no
+        new traffic (so they can be powered down / reassigned — the cost
+        report charges only for active ones). Clamped to [1, n_replicas];
+        returns the applied value."""
+        with self._lock:
+            self._active = max(1, min(len(self._workers), int(n)))
+            return self._active
+
     def start(self) -> "GroupRun":
         if not self._started:
             self._started = True
@@ -220,14 +239,16 @@ class GroupRun:
 
     # -- routing -------------------------------------------------------------
     def _route(self, pb) -> tuple:
-        """Pick (replica_idx, reason) for a prepared batch."""
-        n = len(self._workers)
+        """Pick (replica_idx, reason) for a prepared batch (active replicas
+        only)."""
+        with self._lock:
+            n = self._active
         if n == 1:
             return 0, "single"
         if self.group.routing == RoutingPolicy.STICKY:
             return min(r.rid for r in pb.requests) % n, "sticky"
         with self._lock:
-            loads = list(self._outstanding)
+            loads = self._outstanding[:n]
         lo = min(loads)
         cands = [i for i, v in enumerate(loads) if v == lo]
         if len(cands) == 1:

@@ -151,6 +151,66 @@ class OpenLoopGen:
 
 
 @dataclass
+class PhasedOpenLoopGen:
+    """Open-loop load whose target QPS shifts through phases — the traffic
+    shape that motivates *online* capacity control: a controller tuned for
+    one rate must re-diagnose and re-tune when the rate steps.
+
+    ``phases`` is a list of ``(duration_s, qps)`` segments; each phase
+    emits its own seeded Poisson arrival schedule at that rate, offset to
+    the phase start, all drawn from one workload (rids stay globally
+    unique). Used by ``benchmarks/fig14_capacity.py`` to compare a static
+    configuration against the capacity controller under load steps."""
+    workload: SyntheticWorkload
+    phases: List[tuple]           # (duration_s, qps) per phase
+    seed: int = 0
+
+    def requests(self) -> List[Request]:
+        """Arrival-stamped requests across all phases, arrival-ordered."""
+        arrs: List[np.ndarray] = []
+        start = 0.0
+        for k, (dur, qps) in enumerate(self.phases):
+            if qps <= 0 or dur <= 0:
+                start += max(0.0, dur)
+                continue
+            n = max(1, int(round(dur * qps)))
+            a = poisson_arrivals(n, qps, seed=self.seed + 1000 * k,
+                                 start=start)
+            arrs.append(a[a < start + dur])
+            start += dur
+        if not arrs:
+            return []
+        arr = np.concatenate(arrs)
+        return self.workload.build(len(arr), arrivals=arr)
+
+    @property
+    def n(self) -> int:
+        return len(self.requests())
+
+    @property
+    def total_s(self) -> float:
+        return float(sum(max(0.0, d) for d, _ in self.phases))
+
+    @property
+    def mean_qps(self) -> float:
+        tot = self.total_s
+        return self.n / tot if tot > 0 else 0.0
+
+    def drive(self, scheduler, *, time_scale: float = 1.0) -> int:
+        """Live submission on the phased schedule (open loop: never waits
+        on completions). Returns how many submissions were accepted."""
+        reqs = self.requests()
+        t0 = time.perf_counter()
+        accepted = 0
+        for r in reqs:
+            delay = r.arrival * time_scale - (time.perf_counter() - t0)
+            if delay > 0:
+                time.sleep(delay)
+            accepted += bool(scheduler.submit(r))
+        return accepted
+
+
+@dataclass
 class ClosedLoopGen:
     """Fixed-concurrency loop: ``concurrency`` requests in flight at all
     times; each completion releases the next submission."""

@@ -103,6 +103,24 @@ def _merged_span(intervals: List[Tuple[float, float]]) -> float:
     return out
 
 
+@dataclass(frozen=True)
+class SignalSnapshot:
+    """Cumulative totals at one instant — the capacity subsystem diffs two
+    of these to get window rates (``CapacitySignals.between``). Totals
+    only; no derived rates, so diffing is exact and lock-free."""
+    t: float
+    n_arrivals: int
+    n_completions: int
+    n_rejected: int
+    n_shed: int
+    n_encoded_batches: int
+    encode_busy_s: float          # serial host-prepare time (batcher thread)
+    device_busy_s: float          # summed across replicas (not merged)
+    cache_hits: int
+    cache_misses: int
+    cache_coalesced: int
+
+
 @dataclass
 class ReplicaStats:
     """Per-replica serving statistics (the sharded-serving view: which
@@ -145,8 +163,14 @@ class RunReport:
     routing: Dict[str, int] = field(default_factory=dict)
     # result-cache counters (empty dict when no cache was configured):
     # hits/misses/coalesced/evictions/stale/follower_drops, bytes_resident,
-    # entries, hit_rate = (hits+coalesced)/(hits+misses+coalesced)
+    # entries, hit_rate = (hits+coalesced)/(hits+misses+coalesced), plus
+    # negative_hits/negative_stores and leader_promotions when those
+    # features fire
     cache: Dict[str, object] = field(default_factory=dict)
+    # capacity-controller view (empty dict when capacity=None): diagnosis,
+    # diagnosis history, controller actions, final knob values,
+    # mean_active_replicas
+    capacity: Dict[str, object] = field(default_factory=dict)
 
     def as_dict(self) -> Dict[str, object]:
         return {
@@ -167,6 +191,7 @@ class RunReport:
                             for k, v in sorted(self.per_replica.items())},
             "routing": dict(self.routing),
             "cache": dict(self.cache),
+            "capacity": dict(self.capacity),
         }
 
     def summary(self) -> str:
@@ -181,6 +206,8 @@ class RunReport:
                    if len(self.per_replica) > 1 else "")
                 + (f", cache hit {self.cache['hit_rate'] * 100:.0f}%"
                    if self.cache else "")
+                + (f", diagnosed {self.capacity['diagnosis']}"
+                   if self.capacity.get("diagnosis") else "")
                 + (f", p50/p95/p99 {t.p50_ms:.0f}/{t.p95_ms:.0f}/"
                    f"{t.p99_ms:.0f} ms" if t and t.n else ""))
 
@@ -210,6 +237,16 @@ class MetricsCollector:
         self._cache_entries = 0
         self._cache_seen = False
         self._replica_cache_hits: Dict[int, int] = {}
+        # capacity-subsystem state: cumulative totals for window diffing
+        # (SignalSnapshot) + the controller-action log
+        self._n_arrivals = 0
+        self._n_completions = 0
+        self._n_rejected = 0
+        self._n_shed = 0
+        self._n_encoded_batches = 0
+        self._encode_busy_s = 0.0
+        self._device_busy_total_s = 0.0
+        self._capacity_log: List[Dict[str, object]] = []
 
     def _t(self, rid: int) -> RequestTrace:
         tr = self._traces.get(rid)
@@ -221,6 +258,7 @@ class MetricsCollector:
     def on_arrival(self, rid: int, t: float):
         with self._lock:
             self._t(rid).arrival = t
+            self._n_arrivals += 1
 
     def on_admit(self, rid: int, t: float):
         with self._lock:
@@ -233,15 +271,19 @@ class MetricsCollector:
         with self._lock:
             tr = self._t(rid)
             tr.rejected = True
+            self._n_rejected += 1
             if tr.arrival is None:
                 tr.arrival = t
 
     def on_shed(self, rid: int, t: float):
         with self._lock:
             self._t(rid).shed = True
+            self._n_shed += 1
 
     def on_encode(self, rids: List[int], t0: float, t1: float):
         with self._lock:
+            self._n_encoded_batches += 1
+            self._encode_busy_s += max(0.0, t1 - t0)
             for rid in rids:
                 tr = self._t(rid)
                 tr.encode_start, tr.encode_end = t0, t1
@@ -252,6 +294,7 @@ class MetricsCollector:
                   replica: Optional[int] = None):
         with self._lock:
             self._device_busy.append((t0, t1))
+            self._device_busy_total_s += max(0.0, t1 - t0)
             self._batch_sizes.append(len(rids))
             if replica is not None:
                 self._replica_busy.setdefault(replica, []).append((t0, t1))
@@ -267,8 +310,38 @@ class MetricsCollector:
 
     def on_complete(self, rids: List[int], t: float):
         with self._lock:
+            self._n_completions += len(rids)
             for rid in rids:
                 self._t(rid).completed = t
+
+    # -- capacity-subsystem hooks -------------------------------------------
+    def snapshot(self, now: float) -> SignalSnapshot:
+        """Cumulative totals at ``now`` — the capacity controller diffs two
+        of these into one sliding window of rates."""
+        with self._lock:
+            g = self._cache_counts.get
+            return SignalSnapshot(
+                t=now,
+                n_arrivals=self._n_arrivals,
+                n_completions=self._n_completions,
+                n_rejected=self._n_rejected,
+                n_shed=self._n_shed,
+                n_encoded_batches=self._n_encoded_batches,
+                encode_busy_s=self._encode_busy_s,
+                device_busy_s=self._device_busy_total_s,
+                cache_hits=g("hits", 0),
+                cache_misses=g("misses", 0),
+                cache_coalesced=g("coalesced", 0),
+            )
+
+    def on_capacity(self, entry: Dict[str, object]):
+        """One controller action (as_dict of a ControllerAction)."""
+        with self._lock:
+            self._capacity_log.append(dict(entry))
+
+    def capacity_actions(self) -> List[Dict[str, object]]:
+        with self._lock:
+            return [dict(e) for e in self._capacity_log]
 
     # -- result-cache events ---------------------------------------------------
     def on_cache(self, event: str, n: int = 1):
@@ -370,6 +443,7 @@ class MetricsCollector:
                 self._cache_entries
             cache_seen = self._cache_seen
             replica_cache_hits = dict(self._replica_cache_hits)
+            capacity_log = [dict(e) for e in self._capacity_log]
         done = [t for t in traces if t.completed is not None]
         starts = [t.arrival for t in traces if t.arrival is not None]
         ends = [t.completed for t in done]
@@ -420,6 +494,13 @@ class MetricsCollector:
                 "hit_rate": (g("hits", 0) + g("coalesced", 0)) / tracked
                 if tracked else 0.0,
             }
+            for extra in ("negative_hits", "negative_stores",
+                          "leader_promotions"):
+                if g(extra, 0):
+                    cache[extra] = g(extra, 0)
+        capacity: Dict[str, object] = {}
+        if capacity_log:
+            capacity = {"actions": capacity_log}
         return RunReport(
             n_requests=len(traces),
             n_completed=len(done),
@@ -436,4 +517,5 @@ class MetricsCollector:
             per_replica=per_replica,
             routing=routing,
             cache=cache,
+            capacity=capacity,
         )

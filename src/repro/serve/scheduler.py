@@ -49,7 +49,8 @@ from typing import Callable, List, Optional, Sequence, Union
 
 from repro.core.aggregator import DeadlineAggregator
 from repro.serve.cache import (CacheConfig, CachedResult, Coalescer,
-                               ResultCache, request_key)
+                               NegativeResult, ResultCache, request_key)
+from repro.serve.capacity import CapacityConfig, CapacityController
 from repro.serve.engine import Completion, LMServer, Request
 from repro.serve.group import EngineGroup, RoutingPolicy
 from repro.serve.metrics import MetricsCollector
@@ -83,9 +84,13 @@ class SchedulerConfig:
     # result cache + coalescing (None/False = off, True = defaults,
     # dict/CacheConfig = explicit knobs)
     cache: Union[None, bool, dict, CacheConfig] = None
+    # capacity control loop (None/False = off — bit-identical to the
+    # uncontrolled stack, True = defaults, dict/CapacityConfig = knobs)
+    capacity: Union[None, bool, dict, CapacityConfig] = None
 
     def __post_init__(self):
         self.cache = CacheConfig.coerce(self.cache)
+        self.capacity = CapacityConfig.coerce(self.capacity)
         try:
             self.policy = BackpressurePolicy(self.policy)
         except ValueError:
@@ -174,12 +179,16 @@ class AsyncScheduler:
         self._pending: deque = deque()
         self._agg = DeadlineAggregator(target_batch=config.target_batch,
                                        deadline=config.deadline)
+        # live admission limit — the capacity controller's AIMD knob;
+        # starts at (and without a controller stays at) config.max_queue
+        self._max_queue = config.max_queue
         self._closed = False
         self.n_submitted = 0
         self.n_rejected = 0
         self.n_shed = 0
         self.n_cache_hits = 0
         self.n_coalesced = 0
+        self.n_negative_hits = 0
         # completions minted off the pipeline (cache hits + resolved
         # followers), merged into result()
         self._extra: List[Completion] = []
@@ -197,6 +206,13 @@ class AsyncScheduler:
         self._batcher_error: Optional[BaseException] = None
         self._started = False
         self._results: Optional[List[Completion]] = None
+        # capacity control loop (None = fully unwired: every knob keeps
+        # its configured value and the stack is bit-identical)
+        self._controller: Optional[CapacityController] = None
+        if config.capacity is not None:
+            self._controller = CapacityController(
+                self, config.capacity, metrics=self.metrics,
+                clock=self._now)
 
     # -- time ----------------------------------------------------------------
     def _now(self) -> float:
@@ -246,15 +262,22 @@ class AsyncScheduler:
             for fc in minted:
                 cb(fc)
 
-    def _drop_hook(self, rid: int):
-        """Leader shed or dropped (MCT filter): its followers are dropped
-        with it — never independently — and the key is released so the
-        next identical request becomes a fresh leader."""
+    def _drop_hook(self, rid: int, *, filtered: bool = True):
+        """Leader shed or dropped: its followers are dropped with it —
+        never independently — and the key is released so the next
+        identical request becomes a fresh leader. ``filtered`` is True on
+        the engine-drop path (the GroupRun calls this positionally for
+        rids the MCT feasibility check removed), where the verdict is a
+        property of the *content* and worth negative-caching; a shed is
+        a property of the *moment* and is not."""
         followers: List[Request] = []
         if self._coalescer is not None:
-            _, followers = self._coalescer.fail(rid)
+            key, followers = self._coalescer.fail(rid)
             if followers:
                 self.metrics.on_cache("follower_drops", len(followers))
+            if filtered and key is not None and self.cache is not None:
+                self.cache.put_negative(key, self._now(),
+                                        metrics=self.metrics)
         cb = self._user_on_drop
         if cb is not None:
             cb(rid)
@@ -269,7 +292,40 @@ class AsyncScheduler:
             self._started = True
         self._run.start()
         self._batcher.start()
+        if self._controller is not None:
+            self._controller.start()
         return self
+
+    # -- capacity actuator protocol (driven by CapacityController) -----------
+    def capacity_state(self) -> dict:
+        """Live knob values + load state for the capacity controller."""
+        with self._lock:
+            depth = self._depth_locked()
+            tb = self._agg.target_batch
+            limit = self._max_queue
+        return {"queue_depth": depth, "target_batch": tb,
+                "admission_limit": limit,
+                "n_active": self._run.n_active,
+                "n_replicas": len(self.group.replicas),
+                "replica_depths": tuple(self._run.outstanding())}
+
+    def set_target_batch(self, n: int) -> None:
+        """Retarget batch formation live (next poll sees it)."""
+        with self._lock:
+            self._agg.target_batch = max(1, int(n))
+            self._have_work.notify()    # a smaller target may make a
+                                        # buffered batch ready now
+
+    def set_admission_limit(self, n: int) -> None:
+        """Rescale the bounded admission depth live (AIMD knob)."""
+        with self._lock:
+            self._max_queue = max(1, int(n))
+            self._space.notify_all()    # a raised limit unblocks waiters
+
+    def set_active_replicas(self, n: int) -> int:
+        """Activate/park replicas (parked ones drain, attract no new
+        dispatches)."""
+        return self._run.set_active(n)
 
     def _depth_locked(self) -> int:
         return len(self._pending) + self._agg.pending()
@@ -294,7 +350,9 @@ class AsyncScheduler:
         self.start()                 # idempotent, lock-guarded
         now = self._now()
         shed_rid: Optional[int] = None
+        promoted_drops: List[int] = []
         hit: Optional[Completion] = None
+        negative = False
         key: Optional[str] = None
         with self._lock:
             if self._closed:
@@ -302,7 +360,16 @@ class AsyncScheduler:
             if self.cache is not None:
                 key = request_key(req)
                 entry = self.cache.get(key, now, metrics=self.metrics)
-                if entry is not None:
+                if isinstance(entry, NegativeResult):
+                    # known-filtered content: drop at submit time, zero
+                    # queue space / host encode / device time
+                    negative = True
+                    self.n_submitted += 1
+                    self.n_negative_hits += 1
+                    self.metrics.on_arrival(req.rid, arrival
+                                            if arrival is not None else now)
+                    self.metrics.on_cache("negative_hits")
+                elif entry is not None:
                     hit = entry.mint(req.rid)
                     self.n_submitted += 1
                     self.n_cache_hits += 1
@@ -321,9 +388,9 @@ class AsyncScheduler:
                             req.rid, arrival if arrival is not None else now)
                         self.metrics.on_coalesce(req.rid, leader, now)
                         return True
-            if hit is None:
+            if hit is None and not negative:
                 if self.cfg.policy == BackpressurePolicy.BLOCK:
-                    while self._depth_locked() >= self.cfg.max_queue \
+                    while self._depth_locked() >= self._max_queue \
                             and not self._closed \
                             and not self._pipeline_dead():
                         self._space.wait(timeout=0.1)
@@ -339,20 +406,44 @@ class AsyncScheduler:
                         # root cause)
                         raise RuntimeError("scheduler pipeline failed; "
                                            "call result() for the cause")
-                elif self._depth_locked() >= self.cfg.max_queue:
+                elif self._depth_locked() >= self._max_queue:
                     if self.cfg.policy == BackpressurePolicy.REJECT:
                         self.n_rejected += 1
                         self.metrics.on_reject(req.rid, now)
                         return False
                     # shed_oldest: evict from the aggregator buffer first
-                    # (the overall oldest), then from the pending deque
-                    victim = self._agg.evict_oldest(now)
-                    if victim is None and self._pending:
-                        victim = self._pending.popleft()
-                    if victim is not None:
+                    # (the overall oldest), then from the pending deque.
+                    # A shed coalescing leader with followers promotes its
+                    # first follower instead of killing the whole flight
+                    # (promote_on_shed): the promoted follower takes a
+                    # queue slot as the new leader, so eviction continues
+                    # until a slot genuinely frees up — each promotion
+                    # consumes one follower, so this terminates
+                    while self._depth_locked() >= self._max_queue:
+                        victim = self._agg.evict_oldest(now)
+                        if victim is None and self._pending:
+                            victim = self._pending.popleft()
+                        if victim is None:
+                            break
+                        vrid = victim[1].rid
                         self.n_shed += 1
-                        self.metrics.on_shed(victim[1].rid, now)
-                        shed_rid = victim[1].rid
+                        self.metrics.on_shed(vrid, now)
+                        promoted = None
+                        if self._coalescer is not None \
+                                and self.cache.cfg.promote_on_shed:
+                            promoted = self._coalescer.promote(vrid)
+                        if promoted is None:
+                            shed_rid = vrid
+                            break
+                        self.metrics.on_cache("leader_promotions")
+                        self.metrics.on_admit(promoted.rid, now)
+                        # re-admit at the tail of pending (not the
+                        # aggregator): evict_oldest drains the aggregator
+                        # first, so the promoted leader must not land
+                        # there or this same pass would evict it next and
+                        # kill the flight it just saved
+                        self._pending.append((promoted.rid, promoted))
+                        promoted_drops.append(vrid)
                 self._pending.append((req.rid, req))
                 self.n_submitted += 1
                 # arrival/admit recorded only once the request's fate is
@@ -371,17 +462,34 @@ class AsyncScheduler:
         # user callbacks outside the non-reentrant lock: an on_complete/
         # on_drop that reads queue_depth or re-submits must not deadlock
         # (the device thread already calls them unlocked — same contract)
+        if negative:
+            cb = self._user_on_drop
+            if cb is not None:
+                cb(req.rid)
+            return True
         if hit is not None:
             cb = self._user_on_complete
             if cb is not None:
                 cb(hit)
             return True
+        for vrid in promoted_drops:
+            # promoted-away leaders: the flight survives under the new
+            # leader, so only the user drop callback fires — no coalescer
+            # fail, no follower drops, no negative store
+            cb = self._user_on_drop
+            if cb is not None:
+                cb(vrid)
         if shed_rid is not None:
-            self._drop_hook(shed_rid)
+            self._drop_hook(shed_rid, filtered=False)
         return True
 
     def close(self):
         """Stop accepting requests and flush everything still queued."""
+        # stop the control loop before taking the lock (its tick reads
+        # capacity_state under the same lock); knobs freeze at their
+        # final values for the drain
+        if self._controller is not None:
+            self._controller.stop()
         with self._lock:
             self._closed = True
             self._have_work.notify_all()
@@ -436,6 +544,8 @@ class AsyncScheduler:
         rep = self.metrics.report(offered_qps=offered_qps)
         rep.n_rejected = max(rep.n_rejected, self.n_rejected)
         rep.n_shed = max(rep.n_shed, self.n_shed)
+        if self._controller is not None:
+            rep.capacity = {**rep.capacity, **self._controller.summary()}
         return rep
 
     # -- batcher thread --------------------------------------------------------

@@ -21,8 +21,9 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
-from repro.serve.cache import (CacheConfig, CachedResult, ResultCache,
-                               request_key)
+from repro.serve.cache import (CacheConfig, CachedResult, NegativeResult,
+                               ResultCache, request_key)
+from repro.serve.capacity import CapacityConfig
 from repro.serve.engine import (Completion, LMServer, Request,
                                 form_batch_groups)
 from repro.serve.group import EngineGroup, RoutingPolicy
@@ -64,6 +65,14 @@ class ServeConfig:
                         :class:`~repro.serve.cache.ResultCache` instance
                         is shared by every replica, ``serve()`` call, and
                         live session of the built ``Server``.
+
+    Capacity control (off by default — same bit-identity guarantee):
+      ``capacity``    — ``CapacityConfig`` (or ``True`` for defaults / a
+                        kwargs dict) attaching a
+                        :class:`~repro.serve.capacity.CapacityController`
+                        to every live session: online bottleneck
+                        diagnosis + adaptive batch-target / replica-set /
+                        admission-limit control.
     """
     model: Union[str, object] = "llama3.2-3b"
     reduced: bool = True
@@ -88,15 +97,20 @@ class ServeConfig:
     # result cache + coalescing (None/False = off, True = defaults,
     # dict/CacheConfig = explicit knobs)
     cache: Union[None, bool, dict, CacheConfig] = None
+    # capacity control loop (None/False = off, True = defaults,
+    # dict/CapacityConfig = explicit knobs)
+    capacity: Union[None, bool, dict, CapacityConfig] = None
 
     def __post_init__(self):
         self.cache = CacheConfig.coerce(self.cache)
+        self.capacity = CapacityConfig.coerce(self.capacity)
 
     def scheduler_config(self, **overrides) -> SchedulerConfig:
         base = dict(target_batch=self.target_batch, deadline=self.deadline,
                     max_queue=self.max_queue, policy=self.policy,
                     pipeline_depth=self.pipeline_depth,
-                    routing=self.routing, cache=self.cache)
+                    routing=self.routing, cache=self.cache,
+                    capacity=self.capacity)
         base.update(overrides)
         return SchedulerConfig(**base)
 
@@ -233,6 +247,11 @@ class Server:
         for r in sorted(requests, key=lambda q: q.arrival):
             key = request_key(r)
             entry = self.cache.get(key, r.arrival, metrics=self.metrics)
+            if isinstance(entry, NegativeResult):
+                # content is known-filtered (negative cache): drop it
+                # without encoding or executing, like the engine would
+                self.metrics.on_cache("negative_hits")
+                continue
             if entry is not None:
                 hits.append((r, entry))
                 t = time.perf_counter()
@@ -256,9 +275,13 @@ class Server:
             c = done.get(r.rid)
             foll = followers.get(r.rid, [])
             if c is None:
-                # leader was filtered out (MCT): its followers drop with it
+                # leader was filtered out (MCT): its followers drop with
+                # it, and the verdict is remembered (negative_ttl) so the
+                # same doomed content skips execution on its next arrival
                 if foll:
                     self.metrics.on_cache("follower_drops", len(foll))
+                self.cache.put_negative(key_of[r.rid], r.arrival,
+                                        metrics=self.metrics)
                 continue
             entry = CachedResult.of(
                 c, replica=self.metrics.replica_of(c.rid), now=r.arrival)

@@ -40,6 +40,35 @@ class SimPreparedBatch:
     max_new: int
 
 
+@dataclass(frozen=True)
+class SimProfile:
+    """A named host/device speed ratio — one of the paper's box shapes.
+
+    The paper's Tables 2–3 argue the FPGA deployment's economics hinge on
+    this ratio: an f1.2xlarge-style box (8 vCPUs feeding a big FPGA) is
+    host-bound, a c5.12xlarge-style box (48 vCPUs) is balanced. These
+    profiles reproduce both regimes (plus the inverse) in ``SimServer``
+    milliseconds, so the capacity subsystem can be exercised against each
+    without hand-picking sleep times."""
+    name: str
+    host_ms_per_batch: float
+    host_ms_per_request: float
+    device_ms_per_batch: float
+    device_ms_per_token: float
+
+
+SIM_PROFILES = {
+    # weak 8-vCPU host feeding fast accelerators: the paper's imbalanced
+    # cloud box — serial host prepare saturates long before the devices
+    "weak_host": SimProfile("weak_host", 4.0, 0.25, 2.0, 0.0),
+    # 48-vCPU host, device does real work per batch: neither side idles
+    # grossly at moderate load
+    "balanced": SimProfile("balanced", 1.0, 0.02, 6.0, 0.0),
+    # fast host, slow accelerator: device-bound (more replicas help)
+    "weak_device": SimProfile("weak_device", 0.5, 0.0, 12.0, 0.5),
+}
+
+
 @dataclass
 class SimServer:
     """LMServer-compatible engine with dialable host/device costs."""
@@ -49,6 +78,18 @@ class SimServer:
     device_ms_per_batch: float = 4.0
     device_ms_per_token: float = 0.0
     sleep: object = field(default=time.sleep, repr=False)
+
+    @classmethod
+    def from_profile(cls, profile, **overrides) -> "SimServer":
+        """Build from a :class:`SimProfile` or a ``SIM_PROFILES`` name."""
+        if isinstance(profile, str):
+            profile = SIM_PROFILES[profile]
+        kw = dict(host_ms_per_batch=profile.host_ms_per_batch,
+                  host_ms_per_request=profile.host_ms_per_request,
+                  device_ms_per_batch=profile.device_ms_per_batch,
+                  device_ms_per_token=profile.device_ms_per_token)
+        kw.update(overrides)
+        return cls(**kw)
 
     # -- host-side prepare stage --------------------------------------------
     def prepare_batch(self, requests: Sequence[Request]) -> SimPreparedBatch:

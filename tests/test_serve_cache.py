@@ -8,9 +8,9 @@ import numpy as np
 import pytest
 
 from repro.serve import (AsyncScheduler, CacheConfig, CachedResult,
-                         Coalescer, Request, ResultCache, SchedulerConfig,
-                         ServeConfig, SimServer, build, request_key,
-                         sim_requests)
+                         Coalescer, NegativeResult, Request, ResultCache,
+                         SchedulerConfig, ServeConfig, SimServer, build,
+                         request_key, sim_requests)
 
 
 def _req(rid, tokens, *, max_new=4, arrival=0.0):
@@ -188,12 +188,13 @@ def test_serve_ttl_uses_logical_arrival_time():
 
 # -- single-flight coalescing under backpressure ------------------------------
 
-def _gated_scheduler(gate, **cfg_kw):
+def _gated_scheduler(gate, *, cache=None, **cfg_kw):
     """Scheduler over a SimServer whose host prepare blocks on ``gate`` —
     keeps a leader in flight while more submissions arrive."""
     sim = SimServer(host_ms_per_batch=1.0, device_ms_per_batch=0.0,
                     sleep=lambda dt: gate.wait(timeout=5.0))
-    cfg = SchedulerConfig(cache=CacheConfig(), **cfg_kw)
+    cfg = SchedulerConfig(cache=cache if cache is not None
+                          else CacheConfig(), **cfg_kw)
     return AsyncScheduler(sim, cfg)
 
 
@@ -227,7 +228,10 @@ def test_followers_resolve_with_their_leader():
     assert rep.cache["coalesced"] == 2 and rep.cache["misses"] == 1
 
 
-def test_shed_leader_drops_followers_together():
+def test_shed_leader_promotes_its_first_follower():
+    # shedding a coalescing leader no longer kills the whole flight: the
+    # first follower is promoted to leader (taking a queue slot), so
+    # eviction continues to the next-oldest until a slot genuinely frees
     gate = threading.Event()
     sched = _gated_scheduler(gate, target_batch=1, deadline=0.001,
                              max_queue=2, policy="shed_oldest")
@@ -235,6 +239,34 @@ def test_shed_leader_drops_followers_together():
     sched.on_drop = dropped.append
     sched.submit(_req(0, [1, 1]))                   # plug: batcher blocks on
     _wait_for(lambda: sched.queue_depth == 0)       # its host prepare
+    sched.submit(_req(1, [9, 9]))                   # leader, queued
+    assert sched.submit(_req(2, [9, 9]))            # follower of 1
+    sched.submit(_req(3, [5, 5]))                   # queue now full
+    sched.submit(_req(4, [6, 6]))                   # sheds leader 1 -> 2
+    gate.set()                                      # promoted; then sheds 3
+    outs = {c.rid for c in sched.result()}
+    assert outs == {0, 2, 4}                        # the flight survived
+    assert sorted(dropped) == [1, 3]                # only single requests
+    rep = sched.report()
+    assert rep.n_shed == 2                          # old leader + next-oldest
+    assert rep.cache["leader_promotions"] == 1
+    assert rep.cache.get("follower_drops", 0) == 0  # no flight was killed
+    # accounting: every accepted submission is a hit, miss, or coalesce
+    assert rep.cache["hits"] + rep.cache["misses"] \
+        + rep.cache["coalesced"] == sched.n_submitted == 5
+
+
+def test_promote_on_shed_off_drops_the_flight_atomically():
+    # promote_on_shed=False restores the PR 3 semantics: a shed leader
+    # takes its followers down with it, in one atomic drop
+    gate = threading.Event()
+    sched = _gated_scheduler(gate, target_batch=1, deadline=0.001,
+                             max_queue=2, policy="shed_oldest",
+                             cache=CacheConfig(promote_on_shed=False))
+    dropped = []
+    sched.on_drop = dropped.append
+    sched.submit(_req(0, [1, 1]))                   # plug
+    _wait_for(lambda: sched.queue_depth == 0)
     sched.submit(_req(1, [9, 9]))                   # leader, queued
     assert sched.submit(_req(2, [9, 9]))            # follower of 1
     sched.submit(_req(3, [5, 5]))                   # queue now full
@@ -246,9 +278,7 @@ def test_shed_leader_drops_followers_together():
     rep = sched.report()
     assert rep.n_shed == 1
     assert rep.cache["follower_drops"] == 1
-    # accounting: every accepted submission is a hit, miss, or coalesce
-    assert rep.cache["hits"] + rep.cache["misses"] \
-        + rep.cache["coalesced"] == sched.n_submitted == 5
+    assert rep.cache.get("leader_promotions", 0) == 0
 
 
 def test_followers_bypass_a_full_queue():
@@ -287,6 +317,92 @@ def test_live_cache_hits_skip_the_pipeline():
     hit = [outs[i] for i in range(4, 8) if outs[i].prefill_ms == 0.0]
     for c in hit:
         np.testing.assert_array_equal(c.tokens, outs[0].tokens)
+
+
+# -- negative caching of MCT-filtered verdicts --------------------------------
+
+class FilteringSim(SimServer):
+    """SimServer whose execute stage silently drops any request whose
+    first token is 13 — the MCT feasibility filter shape: the verdict is
+    a property of the *content*, so it is worth negative-caching."""
+
+    def __init__(self, **kw):
+        kw.setdefault("host_ms_per_batch", 0.0)
+        kw.setdefault("device_ms_per_batch", 0.0)
+        super().__init__(**kw)
+        self.n_executed = 0
+
+    def execute_prepared(self, pb, *, device=None):
+        comps = super().execute_prepared(pb, device=device)
+        self.n_executed += len(pb.requests)
+        keep = {r.rid for r in pb.requests if int(r.tokens[0]) != 13}
+        return [c for c in comps if c.rid in keep]
+
+
+def test_negative_cache_unit_ttl_and_gating():
+    cache = ResultCache(CacheConfig(ttl=100.0, negative_ttl=1.0))
+    assert cache.put_negative("k", 0.0)
+    assert isinstance(cache.get("k", 0.5), NegativeResult)
+    assert cache.get("k", 1.5) is None          # negative TTL expired
+    assert "k" not in cache
+    s = cache.stats()
+    assert s["negative_stores"] == 1 and s["negative_hits"] == 1
+    # off by default: put_negative is a no-op unless negative_ttl is set
+    off = ResultCache(CacheConfig())
+    assert not off.put_negative("k", 0.0)
+    assert len(off) == 0
+
+
+def test_scheduler_negative_hit_skips_execution():
+    sim = FilteringSim()
+    sched = AsyncScheduler(sim, SchedulerConfig(
+        target_batch=1, deadline=0.001,
+        cache=CacheConfig(negative_ttl=60.0)))
+    dropped = []
+    sched.on_drop = dropped.append
+    sched.submit(_req(0, [13, 7]))              # executes, gets filtered
+    _wait_for(lambda: sched.cache.stats()["negative_stores"] >= 1)
+    executed_before = sim.n_executed
+    assert sched.submit(_req(1, [13, 7]))       # negative hit: instant drop
+    assert sched.submit(_req(2, [5, 5]))        # unrelated content flows
+    outs = {c.rid for c in sched.result()}
+    assert outs == {2}
+    assert sorted(dropped) == [0, 1]
+    assert sim.n_executed == executed_before + 1    # rid 1 never ran
+    rep = sched.report()
+    assert rep.cache["negative_stores"] == 1
+    assert rep.cache["negative_hits"] == 1
+    assert sched.n_negative_hits == 1
+    # extended accounting: negative hits join the invariant
+    assert rep.cache["hits"] + rep.cache["misses"] + rep.cache["coalesced"] \
+        + rep.cache["negative_hits"] == sched.n_submitted == 3
+
+
+def test_serve_negative_caching_uses_logical_time():
+    srv = build(ServeConfig(cache=CacheConfig(negative_ttl=1.0),
+                            server_factory=lambda i: FilteringSim()))
+    # first arrival executes and is filtered; the verdict is remembered
+    assert srv.serve([_req(0, [13, 4], arrival=0.0)], mode="sync") == []
+    # second arrival within TTL: dropped straight from the negative cache
+    assert srv.serve([_req(1, [13, 4], arrival=0.5)], mode="sync") == []
+    # past TTL the verdict has expired: the content executes (and is
+    # filtered, and re-stored) again
+    assert srv.serve([_req(2, [13, 4], arrival=2.0)], mode="sync") == []
+    rep = srv.report()
+    assert rep.cache["negative_stores"] == 2
+    assert rep.cache["negative_hits"] == 1
+    assert rep.cache["stale"] == 1
+
+
+def test_followers_of_a_filtered_leader_drop_and_store_once():
+    srv = build(ServeConfig(cache=CacheConfig(negative_ttl=10.0),
+                            server_factory=lambda i: FilteringSim()))
+    out = srv.serve([_req(0, [13, 4], arrival=0.0),
+                     _req(1, [13, 4], arrival=0.1)], mode="sync")
+    assert out == []
+    rep = srv.report()
+    assert rep.cache["follower_drops"] == 1
+    assert rep.cache["negative_stores"] == 1
 
 
 # -- shared cache across replicas ---------------------------------------------
