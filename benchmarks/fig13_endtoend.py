@@ -264,6 +264,9 @@ if __name__ == "__main__":
         payload["failed"] = prev.get("failed", [])
         payload["results"] = prev.get("results", []) + common.RESULTS
         payload["cache"] = prev.get("cache", []) + CACHE_POINTS
+        for key, val in prev.items():
+            # sections other harnesses wrote (capacity, trace, ...)
+            payload.setdefault(key, val)
     except (OSError, ValueError):
         pass
     with open(args.json, "w") as f:

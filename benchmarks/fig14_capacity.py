@@ -187,10 +187,10 @@ if __name__ == "__main__":
         payload["suites"] = sorted(set(prev.get("suites", [])) | {"fig14"})
         payload["failed"] = prev.get("failed", [])
         payload["results"] = prev.get("results", []) + common.RESULTS
-        for key in ("cache",):
-            if key in prev:
-                payload[key] = prev[key]
         payload["capacity"] = prev.get("capacity", []) + CAPACITY_POINTS
+        for key, val in prev.items():
+            # sections other harnesses wrote (cache, trace, ...)
+            payload.setdefault(key, val)
     except (OSError, ValueError):
         pass
     with open(args.json, "w") as f:

@@ -20,8 +20,8 @@ def main() -> None:
 
     from benchmarks import (common, fig4_throughput, fig6_overheads,
                             fig7_10_parallel, fig11_pareto, fig12_cpu_accel,
-                            fig13_endtoend, fig14_capacity, roofline_table,
-                            table2_3_cost)
+                            fig13_endtoend, fig14_capacity, fig15_trace,
+                            roofline_table, table2_3_cost)
     suites = {
         "fig4": fig4_throughput.run,
         "fig6": fig6_overheads.run,
@@ -30,6 +30,7 @@ def main() -> None:
         "fig12": fig12_cpu_accel.run,
         "fig13": fig13_endtoend.run,
         "fig14": fig14_capacity.run,
+        "fig15": fig15_trace.run,
         "table2": table2_3_cost.run,
         "roofline": roofline_table.run,
     }

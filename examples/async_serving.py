@@ -17,19 +17,19 @@ Run:  PYTHONPATH=src python examples/async_serving.py
 import time
 
 from repro.serve import (OpenLoopGen, ClosedLoopGen, ServeConfig, SimServer,
-                         SyntheticWorkload, build, sim_requests)
+                         SyntheticWorkload, build, serve, sim_requests)
 
 
 def main():
     cfg = ServeConfig(model="llama3.2-3b", max_seq=48,
                       target_batch=8, deadline=0.01,
-                      max_queue=16, policy="reject")
+                      max_queue=16, policy="reject",
+                      warmup=(1, 2, 4, 8))      # pre-compile bucket sizes
     srv = build(cfg)
     workload = SyntheticWorkload(vocab=srv.engine.cfg.vocab, prompt_len=6,
                                  max_new_tokens=3, seed=1)
 
-    # capacity: service rate with full batches (pre-compile bucket sizes)
-    srv.warmup((1, 2, 4, 8))
+    # capacity: service rate with full batches
     warm = workload.build(8, rid_base=10_000)
     t0 = time.perf_counter()
     srv.engine.generate_batch(warm)
@@ -68,17 +68,26 @@ def main():
           f"({sync_s / pipe_s:.2f}x)")
 
     print("\nsharded serving (simulated replicas, shared admission path):")
+    sreqs = sim_requests(32 * 8, max_new_tokens=4)
     for r in (1, 2, 4):
-        sim = build(ServeConfig(
-            replicas=r, target_batch=8, deadline=1.0,
+        # one-call convenience: build -> serve -> teardown -> report
+        outs, rep = serve(
+            sreqs, replicas=r, target_batch=8, deadline=1.0,
             server_factory=lambda i: SimServer(host_ms_per_batch=3.0,
-                                               device_ms_per_batch=8.0)))
-        sreqs = sim_requests(32 * 8, max_new_tokens=4)
-        t0 = time.perf_counter()
-        outs = sim.serve(sreqs, mode="pipelined")
-        qps = len(outs) / (time.perf_counter() - t0)
-        print(f"  {r} replica(s): {qps:6.0f} q/s  "
+                                               device_ms_per_batch=8.0))
+        print(f"  {r} replica(s): {rep.achieved_qps:6.0f} q/s  "
               f"(host-serial cap {1e3 / 3.0 * 8:.0f} q/s)")
+
+    print("\ntraced run (where did the time go?):")
+    tsrv = build(ServeConfig(
+        replicas=2, target_batch=8, deadline=1.0, trace=True,
+        server_factory=lambda i: SimServer(host_ms_per_batch=3.0,
+                                           device_ms_per_batch=8.0)))
+    with tsrv:
+        touts = tsrv.serve(sreqs[:64], mode="pipelined")
+    print(f"  {tsrv.trace_report().summary()}")
+    print(f"  {tsrv.tracer.timeline(touts[0].rid)}")
+    # tsrv.export_trace("trace.json") -> load in chrome://tracing
     print("done.")
 
 

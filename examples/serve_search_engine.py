@@ -19,7 +19,7 @@ from repro.core.engine import ErbiumEngine
 from repro.core.rules import generate_rules
 from repro.core.workload import generate_workload, workload_stats
 from repro.core.wrapper import MCTWrapper
-from repro.serve import Request, ServeConfig, build
+from repro.serve import Request, serve
 
 
 def main():
@@ -56,21 +56,20 @@ def main():
     # unified repro.serve front end — host encode of batch N+1 overlapped
     # with device execution of batch N (see examples/async_serving.py for
     # the full offered-load and replica sweeps)
-    srv = build(ServeConfig(model="llama3.2-3b", max_seq=64,
-                            target_batch=4, deadline=0.01))
-    srv.warmup((4,))              # pre-compile the decode step bucket
+    from repro.configs.base import get_config
+    vocab = get_config("llama3.2-3b").reduced().vocab
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
-                    tokens=rng.integers(1, srv.engine.cfg.vocab,
-                                        8).astype(np.int32),
+                    tokens=rng.integers(1, vocab, 8).astype(np.int32),
                     max_new_tokens=4, arrival=i * 0.002)
             for i in range(12)]
-    outs = srv.serve(reqs, mode="pipelined")
+    outs, rep = serve(reqs, model="llama3.2-3b", max_seq=64,
+                      target_batch=4, deadline=0.01, warmup=(4,))
     sizes = [o.batch_size for o in outs]
     print(f"route scoring: {len(outs)} requests served, batch sizes {sizes}")
     print(f"  prefill {np.mean([o.prefill_ms for o in outs]):.1f} ms, "
           f"decode {np.mean([o.decode_ms for o in outs]):.1f} ms (batched)")
-    print(f"  {srv.report().summary()}")
+    print(f"  {rep.summary()}")
     print("done.")
 
 

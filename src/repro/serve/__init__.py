@@ -2,21 +2,32 @@
 
 Preferred API — one config, one call:
 
-    from repro.serve import ServeConfig, build
+    from repro.serve import ServeConfig, build, serve
     srv = build(ServeConfig(model="llama3.2-3b", replicas=2))
     srv.serve(requests, mode="pipelined")     # deterministic replay
     sched = srv.session()                     # live bounded-admission serving
+    outs, report = serve(requests, replicas=2)  # one-call convenience
 
 Modules:
 
-- ``server``    — ServeConfig + build() -> Server facade
+- ``server``    — ServeConfig + build() -> Server facade, serve() one-call
+                  convenience
 - ``engine``    — LMServer (prepare/execute split), Request/Completion,
                   form_batch_groups (logical-time batch formation)
 - ``group``     — EngineGroup/Replica: one engine replica per device or
                   mesh slice, least-outstanding-work / sticky routing,
                   per-replica host-encode/device-execute pipelines
 - ``scheduler`` — AsyncScheduler (bounded admission, BackpressurePolicy
-                  REJECT/SHED_OLDEST/BLOCK), deprecated run_pipelined shim
+                  REJECT/SHED_OLDEST/BLOCK)
+- ``trace``     — per-request lifecycle tracing: Tracer (bounded ring of
+                  Span records across submit → queue_wait → encode →
+                  dispatch → device_execute → complete), TraceReport
+                  (per-stage percentiles + per-replica straggler
+                  attribution), Chrome ``trace_event`` / JSONL exporters;
+                  enable via ``ServeConfig(trace=True)`` (default off —
+                  the disabled stack is bit-identical)
+- ``config``    — shared coerce() rule (None/False -> off, True -> cls(),
+                  dict -> cls(**d)) used by every sub-config field
 - ``cache``     — content-addressed ResultCache (TTL + byte-bounded LRU,
                   optional negative caching of MCT-filtered verdicts) and
                   single-flight Coalescer with shed-leader promotion;
@@ -57,10 +68,13 @@ from repro.serve.loadgen import (ClosedLoopGen, OpenLoopGen,
 from repro.serve.metrics import (LatencyStats, MetricsCollector,
                                  ReplicaStats, RequestTrace, RunReport,
                                  SignalSnapshot)
+from repro.serve.config import Coercible, coerce
 from repro.serve.scheduler import (AsyncScheduler, BackpressurePolicy,
-                                   SchedulerConfig, run_pipelined)
-from repro.serve.server import ServeConfig, Server, build
+                                   SchedulerConfig)
+from repro.serve.server import ServeConfig, Server, build, serve
 from repro.serve.sim import SIM_PROFILES, SimProfile, SimServer, sim_requests
+from repro.serve.trace import (ReplicaTraceStats, Span, TraceConfig,
+                               TraceReport, Tracer, render_timeline)
 
 __all__ = [
     "CacheConfig", "CachedResult", "Coalescer", "NegativeResult",
@@ -77,7 +91,9 @@ __all__ = [
     "LatencyStats", "MetricsCollector", "ReplicaStats", "RequestTrace",
     "RunReport", "SignalSnapshot",
     "AsyncScheduler", "BackpressurePolicy", "SchedulerConfig",
-    "run_pipelined",
-    "ServeConfig", "Server", "build",
+    "ServeConfig", "Server", "build", "serve",
     "SIM_PROFILES", "SimProfile", "SimServer", "sim_requests",
+    "Coercible", "coerce",
+    "ReplicaTraceStats", "Span", "TraceConfig", "TraceReport", "Tracer",
+    "render_timeline",
 ]

@@ -45,6 +45,7 @@ from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.serve.config import Coercible
 from repro.serve.engine import Completion, Request
 
 # accounting overhead per entry (key, OrderedDict slot, dataclass) so a
@@ -72,7 +73,7 @@ def request_key(req: Request) -> str:
 
 
 @dataclass
-class CacheConfig:
+class CacheConfig(Coercible):
     """Serving-layer result cache knobs (attach to ``ServeConfig.cache``
     / ``SchedulerConfig.cache``; ``None`` keeps caching fully off and the
     serving stack bit-identical to its uncached behavior).
@@ -97,22 +98,6 @@ class CacheConfig:
     coalesce: bool = True
     negative_ttl: Optional[float] = None
     promote_on_shed: bool = True
-
-    @classmethod
-    def coerce(cls, value: Union[None, bool, dict, "CacheConfig"]
-               ) -> Optional["CacheConfig"]:
-        """Normalise the config-field spellings: None/False -> off,
-        True -> defaults, dict -> kwargs, CacheConfig -> itself."""
-        if value is None or value is False:
-            return None
-        if value is True:
-            return cls()
-        if isinstance(value, dict):
-            return cls(**value)
-        if isinstance(value, cls):
-            return value
-        raise ValueError(
-            f"cache must be None/bool/dict/CacheConfig, got {value!r}")
 
 
 @dataclass
@@ -165,8 +150,10 @@ class ResultCache:
 
     The optional ``metrics`` argument on :meth:`get`/:meth:`put` forwards
     stale/eviction/bytes-resident events to that run's
-    ``MetricsCollector``; the cache also keeps its own lifetime
-    :meth:`stats` since one cache may outlive many sessions.
+    ``MetricsCollector``; the optional ``tracer``/``rid`` pair likewise
+    emits ``cache_lookup``/``cache_store`` marks into that run's
+    :class:`~repro.serve.trace.Tracer`. The cache also keeps its own
+    lifetime :meth:`stats` since one cache may outlive many sessions.
     """
 
     def __init__(self, config: Union[None, bool, dict, CacheConfig] = None):
@@ -182,37 +169,48 @@ class ResultCache:
         with self._lock:
             return len(self._entries)
 
-    def get(self, key: str, now: float, *,
-            metrics=None) -> Union[None, CachedResult, NegativeResult]:
+    def get(self, key: str, now: float, *, metrics=None, tracer=None,
+            rid=None) -> Union[None, CachedResult, NegativeResult]:
         """Look up ``key`` at time ``now`` (caller's clock). Returns the
         entry (touching its LRU position) or None on miss/TTL expiry; a
         :class:`NegativeResult` means the content is known-filtered (its
         TTL is ``negative_ttl``). Misses are counted internally only — the
         caller decides whether a miss turns into an admitted leader (see
         AsyncScheduler.submit)."""
-        with self._lock:
-            e = self._entries.get(key)
-            if e is None:
-                self._counts["misses"] += 1
-                return None
-            negative = isinstance(e, NegativeResult)
-            ttl = self.cfg.negative_ttl if negative else self.cfg.ttl
-            if ttl is not None and now - e.stored_at > ttl:
-                del self._entries[key]
-                self.bytes_resident -= e.nbytes
-                self._counts["stale"] += 1
-                if metrics is not None:
-                    metrics.on_cache("stale")
-                    metrics.note_cache_bytes(self.bytes_resident,
-                                             len(self._entries))
-                return None
-            self._entries.move_to_end(key)
-            self._counts["negative_hits" if negative else "hits"] += 1
-            return e
+        outcome = None
+        try:
+            with self._lock:
+                e = self._entries.get(key)
+                if e is None:
+                    self._counts["misses"] += 1
+                    outcome = "miss"
+                    return None
+                negative = isinstance(e, NegativeResult)
+                ttl = self.cfg.negative_ttl if negative else self.cfg.ttl
+                if ttl is not None and now - e.stored_at > ttl:
+                    del self._entries[key]
+                    self.bytes_resident -= e.nbytes
+                    self._counts["stale"] += 1
+                    outcome = "stale"
+                    if metrics is not None:
+                        metrics.on_cache("stale")
+                        metrics.note_cache_bytes(self.bytes_resident,
+                                                 len(self._entries))
+                    return None
+                self._entries.move_to_end(key)
+                self._counts["negative_hits" if negative else "hits"] += 1
+                outcome = "negative_hit" if negative else "hit"
+                return e
+        finally:
+            if tracer is not None:
+                tracer.mark("cache_lookup", now, rid=rid, outcome=outcome)
 
-    def put(self, key: str, entry: CachedResult, *, metrics=None) -> None:
+    def put(self, key: str, entry: CachedResult, *, metrics=None,
+            tracer=None, rid=None) -> None:
         """Insert/replace ``key``, then evict strictly-LRU until the byte
         bound holds (an entry larger than ``max_bytes`` evicts itself)."""
+        if tracer is not None:
+            tracer.mark("cache_store", entry.stored_at, rid=rid)
         with self._lock:
             old = self._entries.pop(key, None)
             if old is not None:
@@ -233,12 +231,15 @@ class ResultCache:
                 metrics.note_cache_bytes(self.bytes_resident,
                                          len(self._entries))
 
-    def put_negative(self, key: str, now: float, *, metrics=None) -> bool:
+    def put_negative(self, key: str, now: float, *, metrics=None,
+                     tracer=None, rid=None) -> bool:
         """Remember that ``key`` was MCT-filtered. No-op (returns False)
         unless ``negative_ttl`` is configured; shares the LRU/byte bound
         with positive entries."""
         if self.cfg.negative_ttl is None:
             return False
+        if tracer is not None:
+            tracer.mark("cache_store", now, rid=rid, negative=True)
         with self._lock:
             old = self._entries.pop(key, None)
             if old is not None:

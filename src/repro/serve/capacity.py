@@ -50,6 +50,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 from repro.core.cost_model import (aws_accel_usd_per_hour,
                                    aws_host_usd_per_hour,
                                    usd_per_1k_queries)
+from repro.serve.config import Coercible
 from repro.serve.metrics import SignalSnapshot
 
 
@@ -181,7 +182,7 @@ class BottleneckMonitor:
 
 
 @dataclass
-class CapacityConfig:
+class CapacityConfig(Coercible):
     """Knobs for the capacity control loop (attach to
     ``ServeConfig.capacity`` / ``SchedulerConfig.capacity``; ``None``
     keeps the subsystem fully unwired and the stack bit-identical to its
@@ -215,22 +216,6 @@ class CapacityConfig:
     max_queue: int = 256
     queue_ai: int = 8
     queue_md: float = 0.5
-
-    @classmethod
-    def coerce(cls, value: Union[None, bool, dict, "CapacityConfig"]
-               ) -> Optional["CapacityConfig"]:
-        """Normalise the config-field spellings: None/False -> off,
-        True -> defaults, dict -> kwargs, CapacityConfig -> itself."""
-        if value is None or value is False:
-            return None
-        if value is True:
-            return cls()
-        if isinstance(value, dict):
-            return cls(**value)
-        if isinstance(value, cls):
-            return value
-        raise ValueError(
-            f"capacity must be None/bool/dict/CapacityConfig, got {value!r}")
 
 
 @dataclass(frozen=True)
@@ -284,10 +269,12 @@ class CapacityController:
     pipeline — it is recorded on :attr:`error` and the loop stops.
     """
 
-    def __init__(self, actuator, config=None, *, metrics=None, clock=None):
+    def __init__(self, actuator, config=None, *, metrics=None, clock=None,
+                 tracer=None):
         self.cfg = CapacityConfig.coerce(config) or CapacityConfig()
         self.actuator = actuator
         self.metrics = metrics
+        self.tracer = tracer            # controller actions as trace events
         self.clock = clock if clock is not None else time.perf_counter
         self.monitor = BottleneckMonitor(
             idle_hi=self.cfg.idle_hi, idle_lo=self.cfg.idle_lo,
@@ -392,6 +379,12 @@ class CapacityController:
         self.actions.append(a)
         if self.metrics is not None:
             self.metrics.on_capacity(a.as_dict())
+        if self.tracer is not None:
+            # batch-target doubling / replica parking shows up on the
+            # same timeline as the requests it affects
+            self.tracer.mark("controller", t, action=action,
+                             diagnosis=str(diag), before=float(before),
+                             after=float(after))
 
     def _set_batch(self, n, now, diag):
         before = self.actuator.capacity_state()["target_batch"]

@@ -1,0 +1,56 @@
+"""Uniform config-field coercion for the serving subsystems.
+
+Every optional subsystem of the serving stack — result cache, capacity
+control, tracing — is switched on the same way on ``ServeConfig`` /
+``SchedulerConfig``::
+
+    ServeConfig(cache=True, capacity={"window_s": 0.1}, trace=True)
+
+    None / False   -> off (the stack stays bit-identical to the
+                      subsystem-free behavior)
+    True           -> on, with the subsystem's default knobs
+    dict           -> on, dict unpacked as the config's kwargs
+    config object  -> on, used as-is
+
+:func:`coerce` is the one implementation of that rule;
+:class:`Coercible` mixes it in as the ``coerce`` classmethod that
+``CacheConfig``/``CapacityConfig``/``TraceConfig`` expose (and that
+``ServeConfig.__post_init__``/``SchedulerConfig.__post_init__`` apply),
+so no subsystem ever grows its own subtly-different spelling.
+"""
+from __future__ import annotations
+
+from typing import Optional, Type, TypeVar
+
+C = TypeVar("C")
+
+
+def coerce(cls: Type[C], value: object, *,
+           field: Optional[str] = None) -> Optional[C]:
+    """Normalise one config-field value to ``None`` (off) or a ``cls``
+    instance: ``None``/``False`` -> off, ``True`` -> ``cls()`` defaults,
+    ``dict`` -> ``cls(**value)``, ``cls`` instance -> itself. ``field``
+    names the config field in the error message (defaults to the class
+    name minus its ``Config`` suffix, lowercased)."""
+    if value is None or value is False:
+        return None
+    if value is True:
+        return cls()
+    if isinstance(value, dict):
+        return cls(**value)
+    if isinstance(value, cls):
+        return value
+    name = field if field is not None \
+        else cls.__name__.removesuffix("Config").lower()
+    raise ValueError(
+        f"{name} must be None/bool/dict/{cls.__name__}, got {value!r}")
+
+
+class Coercible:
+    """Mixin giving a config dataclass the shared ``coerce`` classmethod."""
+
+    @classmethod
+    def coerce(cls, value):
+        """Normalise the config-field spellings: None/False -> off,
+        True -> defaults, dict -> kwargs, instance -> itself."""
+        return coerce(cls, value)

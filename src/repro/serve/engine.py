@@ -9,7 +9,7 @@ Fig 14 co-location of MCT + Route Scoring on one accelerator).
 
 The batched path is split into a host-side **prepare** stage (token-matrix
 assembly + MCT query encoding, pure numpy) and a device-side **execute**
-stage (rule matching + decode loop). ``serve_stream(pipeline=True)`` and
+stage (rule matching + decode loop). ``repro.serve.group.EngineGroup`` and
 ``repro.serve.scheduler`` exploit the split to overlap host encode of batch
 N+1 with device execution of batch N — the imbalance the paper's §5–6
 identify as the deployment's make-or-break.
@@ -17,7 +17,6 @@ identify as the deployment's make-or-break.
 from __future__ import annotations
 
 import time
-import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -244,46 +243,6 @@ class LMServer:
         deadline policy (see module-level :func:`form_batch_groups`)."""
         return form_batch_groups(requests, target_batch=target_batch,
                                  deadline=deadline)
-
-    def serve_stream(self, requests: Sequence[Request], *,
-                     target_batch: int = 8, deadline: float = 0.05,
-                     pipeline: bool = False, pipeline_depth: int = 2,
-                     devices=None, metrics=None) -> List[Completion]:
-        """Aggregate an arrival-ordered request stream with the paper's
-        deadline policy, then run batches.
-
-        ``pipeline=False`` is the synchronous baseline: prepare and execute
-        strictly alternate, the device idles during every host encode.
-        ``pipeline=True`` is deprecated — it delegates to
-        ``EngineGroup.run_groups`` (the implementation behind
-        ``repro.serve.Server.serve(mode="pipelined")``): identical
-        completions, overlapped host/device work.
-        """
-        groups = self.form_batches(requests, target_batch=target_batch,
-                                   deadline=deadline)
-        if pipeline:
-            warnings.warn(
-                "LMServer.serve_stream(pipeline=True) is deprecated; use "
-                "repro.serve.build(cfg).serve(requests, mode='pipelined')",
-                DeprecationWarning, stacklevel=2)
-            from repro.serve.group import EngineGroup
-            group = EngineGroup.from_server(self, devices=devices)
-            return group.run_groups(groups, pipeline_depth=pipeline_depth,
-                                    metrics=metrics)
-        out: List[Completion] = []
-        for rs in groups:
-            te0 = time.perf_counter()
-            pb = self.prepare_batch(rs)
-            te1 = time.perf_counter()
-            comps = self.execute_prepared(pb)
-            td1 = time.perf_counter()
-            if metrics is not None:
-                rids = [r.rid for r in rs]
-                metrics.on_encode(rids, te0, te1)
-                metrics.on_device(rids, te1, td1)
-                metrics.on_complete([c.rid for c in comps], td1)
-            out.extend(comps)
-        return out
 
     def _mct_feasible(self, rs: List[Request], encoded: np.ndarray,
                       owner: List[int]) -> List[bool]:

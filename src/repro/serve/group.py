@@ -79,10 +79,12 @@ class _ReplicaWorker:
                  on_complete: Optional[Callable[[Completion], None]] = None,
                  on_drop: Optional[Callable[[int], None]] = None,
                  clock=time.perf_counter, delay=None,
-                 on_batch_done: Optional[Callable[[int, int], None]] = None):
+                 on_batch_done: Optional[Callable[[int, int], None]] = None,
+                 tracer=None):
         self.replica = replica
         self.handoff: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
         self.metrics = metrics
+        self.tracer = tracer
         self.on_complete = on_complete
         self.on_drop = on_drop          # rid sinks without a Completion
         self.clock = clock
@@ -143,6 +145,20 @@ class _ReplicaWorker:
                     self.metrics.on_device(rids, t0, t1,
                                            replica=self.replica.idx)
                     self.metrics.on_complete([c.rid for c in comps], t1)
+                if self.tracer is not None:
+                    # the exact t0/t1 handed to metrics, so TraceReport
+                    # device percentiles reconcile with RunReport's
+                    self.tracer.span("device_execute", t0, t1,
+                                     replica=self.replica.idx, rids=rids)
+                    done_rids = {c.rid for c in comps}
+                    for c in comps:
+                        self.tracer.mark("complete", t1, rid=c.rid,
+                                         replica=self.replica.idx)
+                    for rid in rids:
+                        if rid not in done_rids:    # MCT filter drop
+                            self.tracer.mark("drop", t1, rid=rid,
+                                             replica=self.replica.idx,
+                                             reason="filtered")
                 self.completions.extend(comps)
                 if self.on_batch_done is not None:
                     self.on_batch_done(self.replica.idx,
@@ -166,14 +182,17 @@ class GroupRun:
 
     def __init__(self, group: "EngineGroup", *, pipeline_depth: int = 2,
                  metrics=None, clock=time.perf_counter,
-                 on_complete=None, on_drop=None):
+                 on_complete=None, on_drop=None, tracer=None):
         self.group = group
         self.metrics = metrics
+        self.tracer = tracer
+        self._clock = clock
         self._workers = [
             _ReplicaWorker(rep, pipeline_depth, metrics,
                            on_complete=on_complete, on_drop=on_drop,
                            clock=clock, delay=group.delay,
-                           on_batch_done=self._on_batch_done)
+                           on_batch_done=self._on_batch_done,
+                           tracer=tracer)
             for rep in group.replicas]
         self._lock = threading.Lock()
         self._outstanding = [0] * len(self._workers)
@@ -273,6 +292,10 @@ class GroupRun:
             depth_work = self._outstanding[idx]
         if self.metrics is not None:
             self.metrics.on_route(idx, reason)
+        if self.tracer is not None:
+            self.tracer.mark("dispatch", self._clock(), replica=idx,
+                             reason=reason,
+                             rids=[r.rid for r in pb.requests])
         self._workers[idx].put(pb)
         if self.metrics is not None:
             self.metrics.note_replica_depth(
@@ -361,23 +384,23 @@ class EngineGroup:
 
     def open(self, *, pipeline_depth: int = 2, metrics=None,
              clock=time.perf_counter, on_complete=None,
-             on_drop=None) -> GroupRun:
+             on_drop=None, tracer=None) -> GroupRun:
         return GroupRun(self, pipeline_depth=pipeline_depth, metrics=metrics,
                         clock=clock, on_complete=on_complete,
-                        on_drop=on_drop)
+                        on_drop=on_drop, tracer=tracer)
 
     def run_groups(self, groups, *, pipeline_depth: int = 2,
-                   metrics=None) -> List[Completion]:
+                   metrics=None, tracer=None) -> List[Completion]:
         """Execute pre-formed batch groups through per-replica pipelines.
 
         Batch composition is fixed by the caller and every replica computes
         the same function, so completions are bit-identical to running the
         groups synchronously on one replica — only the placement and the
         host/device overlap differ. This is the single implementation
-        behind ``Server.serve(mode="pipelined")`` and the deprecated
-        ``run_pipelined`` / ``serve_stream(pipeline=True)`` shims.
+        behind ``Server.serve(mode="pipelined")``.
         """
-        run = self.open(pipeline_depth=pipeline_depth, metrics=metrics).start()
+        run = self.open(pipeline_depth=pipeline_depth, metrics=metrics,
+                        tracer=tracer).start()
         try:
             for rs in groups:
                 rs = list(rs)
@@ -388,6 +411,9 @@ class EngineGroup:
                 t1 = time.perf_counter()
                 if metrics is not None:
                     metrics.on_encode([r.rid for r in rs], t0, t1)
+                if tracer is not None:
+                    tracer.span("encode", t0, t1,
+                                rids=[r.rid for r in rs])
                 run.dispatch(pb)
         except BaseException:
             # prepare/dispatch failed mid-run: reap every replica worker

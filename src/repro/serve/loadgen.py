@@ -131,7 +131,7 @@ class OpenLoopGen:
 
     def requests(self) -> List[Request]:
         """Arrival-stamped requests for deterministic logical-time replay
-        (``LMServer.form_batches`` / ``serve_stream``)."""
+        (``LMServer.form_batches`` / ``Server.serve``)."""
         arr = poisson_arrivals(self.n, self.qps, seed=self.seed)
         return self.workload.build(self.n, arrivals=arr)
 

@@ -400,6 +400,14 @@ class MetricsCollector:
             tr = self._traces.get(rid)
             return tr.replica if tr is not None else None
 
+    def arrival_of(self, rid: int) -> Optional[float]:
+        """The arrival timestamp recorded for ``rid`` (None if unseen) —
+        the tracer uses it so queue-wait spans start at the exact value
+        the latency breakdown uses."""
+        with self._lock:
+            tr = self._traces.get(rid)
+            return tr.arrival if tr is not None else None
+
     def note_queue_depth(self, depth: int):
         with self._lock:
             if depth > self.max_queue_depth:

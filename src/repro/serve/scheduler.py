@@ -34,18 +34,21 @@ identical in-flight request adopts the new one as a follower). Hits and
 followers never occupy admission-queue space, so they are exempt from all
 three backpressure policies; a shed leader drops its followers with it.
 
-``run_pipelined`` is a deprecated shim over
-:meth:`EngineGroup.run_groups` — prefer ``repro.serve.build(cfg).serve()``.
+With a :class:`~repro.serve.trace.TraceConfig` on the config (or a shared
+:class:`~repro.serve.trace.Tracer` passed in), every lifecycle step —
+submit, cache lookup, admission, queue wait, encode, dispatch, device
+execute, completion/shed/drop — lands as a span on one timeline, using
+the same timestamps the metrics layer records. ``trace=None`` (default)
+emits nothing and keeps the stack bit-identical to its untraced behavior.
 """
 from __future__ import annotations
 
 import enum
 import threading
 import time
-import warnings
 from collections import deque
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 from repro.core.aggregator import DeadlineAggregator
 from repro.serve.cache import (CacheConfig, CachedResult, Coalescer,
@@ -54,6 +57,7 @@ from repro.serve.capacity import CapacityConfig, CapacityController
 from repro.serve.engine import Completion, LMServer, Request
 from repro.serve.group import EngineGroup, RoutingPolicy
 from repro.serve.metrics import MetricsCollector
+from repro.serve.trace import TraceConfig, Tracer, TraceReport
 
 
 class BackpressurePolicy(str, enum.Enum):
@@ -87,10 +91,17 @@ class SchedulerConfig:
     # capacity control loop (None/False = off — bit-identical to the
     # uncontrolled stack, True = defaults, dict/CapacityConfig = knobs)
     capacity: Union[None, bool, dict, CapacityConfig] = None
+    # per-request tracing (None/False = off — zero emission, bit-identical
+    # stack; True = defaults, dict/TraceConfig = knobs)
+    trace: Union[None, bool, dict, TraceConfig] = None
 
     def __post_init__(self):
+        # every optional subsystem uses the one shared coercion rule
+        # (repro.serve.config.coerce): None/False off, True defaults,
+        # dict kwargs, instance as-is
         self.cache = CacheConfig.coerce(self.cache)
         self.capacity = CapacityConfig.coerce(self.capacity)
+        self.trace = TraceConfig.coerce(self.trace)
         try:
             self.policy = BackpressurePolicy(self.policy)
         except ValueError:
@@ -104,28 +115,6 @@ class SchedulerConfig:
                 "routing must be one of "
                 f"{[p.value for p in RoutingPolicy]}, "
                 f"got {self.routing!r}") from None
-
-
-def run_pipelined(server, groups: Sequence[Sequence[Request]], *,
-                  pipeline_depth: int = 2, devices=None,
-                  metrics: Optional[MetricsCollector] = None
-                  ) -> List[Completion]:
-    """Deprecated: use ``repro.serve.build(cfg).serve(requests,
-    mode="pipelined")`` or :meth:`EngineGroup.run_groups`.
-
-    Executes pre-formed batches through the per-replica pipelines; batch
-    composition is fixed by the caller, so the result is bit-identical to
-    running the groups synchronously — only the host/device overlap
-    differs.
-    """
-    warnings.warn(
-        "run_pipelined is deprecated; use repro.serve.build(cfg)"
-        ".serve(requests, mode='pipelined') or EngineGroup.run_groups",
-        DeprecationWarning, stacklevel=2)
-    group = server if isinstance(server, EngineGroup) \
-        else EngineGroup.from_server(server, devices=devices)
-    return group.run_groups(groups, pipeline_depth=pipeline_depth,
-                            metrics=metrics)
 
 
 class AsyncScheduler:
@@ -147,6 +136,7 @@ class AsyncScheduler:
                  metrics: Optional[MetricsCollector] = None,
                  on_complete: Optional[Callable[[Completion], None]] = None,
                  cache: Optional[ResultCache] = None,
+                 tracer: Optional[Tracer] = None,
                  **overrides):
         if config is None:
             config = SchedulerConfig(**overrides)
@@ -172,6 +162,17 @@ class AsyncScheduler:
             self.cache = None
         self._coalescer = Coalescer(enabled=self.cache.cfg.coalesce) \
             if self.cache is not None else None
+        # tracer: an explicit instance (Server shares one across sessions)
+        # wins over the config's TraceConfig; None = zero emission
+        if tracer is not None:
+            self.tracer = tracer
+        elif config.trace is not None:
+            self.tracer = Tracer(config.trace)
+        else:
+            self.tracer = None
+        # queue-wait start per admitted rid (the same arrival value handed
+        # to metrics.on_arrival) — maintained only when tracing is on
+        self._admit_t: Dict[int, float] = {}
         self._epoch = time.perf_counter()
         self._lock = threading.Lock()
         self._have_work = threading.Condition(self._lock)
@@ -201,7 +202,8 @@ class AsyncScheduler:
                                     metrics=self.metrics,
                                     clock=self._now,
                                     on_complete=self._complete_hook,
-                                    on_drop=self._drop_hook)
+                                    on_drop=self._drop_hook,
+                                    tracer=self.tracer)
         self._batcher = threading.Thread(target=self._batch_loop, daemon=True)
         self._batcher_error: Optional[BaseException] = None
         self._started = False
@@ -212,7 +214,7 @@ class AsyncScheduler:
         if config.capacity is not None:
             self._controller = CapacityController(
                 self, config.capacity, metrics=self.metrics,
-                clock=self._now)
+                clock=self._now, tracer=self.tracer)
 
     # -- time ----------------------------------------------------------------
     def _now(self) -> float:
@@ -249,10 +251,14 @@ class AsyncScheduler:
             if key is not None:
                 entry = CachedResult.of(
                     comp, replica=self.metrics.replica_of(comp.rid), now=now)
-                self.cache.put(key, entry, metrics=self.metrics)
+                self.cache.put(key, entry, metrics=self.metrics,
+                               tracer=self.tracer, rid=comp.rid)
                 for freq in followers:
                     minted.append(entry.mint(freq.rid))
                     self.metrics.on_complete([freq.rid], now)
+                    if self.tracer is not None:
+                        self.tracer.mark("complete", now, rid=freq.rid,
+                                         source="coalesce")
             if minted:
                 with self._lock:
                     self._extra.extend(minted)
@@ -275,9 +281,15 @@ class AsyncScheduler:
             key, followers = self._coalescer.fail(rid)
             if followers:
                 self.metrics.on_cache("follower_drops", len(followers))
+                if self.tracer is not None:
+                    now = self._now()
+                    for freq in followers:
+                        self.tracer.mark("follower_drop", now,
+                                         rid=freq.rid, leader=rid)
             if filtered and key is not None and self.cache is not None:
                 self.cache.put_negative(key, self._now(),
-                                        metrics=self.metrics)
+                                        metrics=self.metrics,
+                                        tracer=self.tracer, rid=rid)
         cb = self._user_on_drop
         if cb is not None:
             cb(rid)
@@ -349,6 +361,8 @@ class AsyncScheduler:
         blocked — backpressure only ever acts on leaders."""
         self.start()                 # idempotent, lock-guarded
         now = self._now()
+        tr = self.tracer
+        arr = arrival if arrival is not None else now
         shed_rid: Optional[int] = None
         promoted_drops: List[int] = []
         hit: Optional[Completion] = None
@@ -359,7 +373,8 @@ class AsyncScheduler:
                 raise RuntimeError("scheduler is closed")
             if self.cache is not None:
                 key = request_key(req)
-                entry = self.cache.get(key, now, metrics=self.metrics)
+                entry = self.cache.get(key, now, metrics=self.metrics,
+                                       tracer=tr, rid=req.rid)
                 if isinstance(entry, NegativeResult):
                     # known-filtered content: drop at submit time, zero
                     # queue space / host encode / device time
@@ -369,6 +384,9 @@ class AsyncScheduler:
                     self.metrics.on_arrival(req.rid, arrival
                                             if arrival is not None else now)
                     self.metrics.on_cache("negative_hits")
+                    if tr is not None:
+                        tr.mark("submit", arr, rid=req.rid)
+                        tr.mark("negative_drop", now, rid=req.rid)
                 elif entry is not None:
                     hit = entry.mint(req.rid)
                     self.n_submitted += 1
@@ -379,6 +397,10 @@ class AsyncScheduler:
                     self.metrics.on_cache_hit(req.rid, now,
                                               replica=entry.replica)
                     self.metrics.on_complete([req.rid], now)
+                    if tr is not None:
+                        tr.mark("submit", arr, rid=req.rid)
+                        tr.mark("complete", now, rid=req.rid,
+                                source="cache")
                 else:
                     leader = self._coalescer.attach(key, req)
                     if leader is not None:
@@ -387,6 +409,10 @@ class AsyncScheduler:
                         self.metrics.on_arrival(
                             req.rid, arrival if arrival is not None else now)
                         self.metrics.on_coalesce(req.rid, leader, now)
+                        if tr is not None:
+                            tr.mark("submit", arr, rid=req.rid)
+                            tr.mark("coalesce", now, rid=req.rid,
+                                    leader=leader)
                         return True
             if hit is None and not negative:
                 if self.cfg.policy == BackpressurePolicy.BLOCK:
@@ -410,6 +436,9 @@ class AsyncScheduler:
                     if self.cfg.policy == BackpressurePolicy.REJECT:
                         self.n_rejected += 1
                         self.metrics.on_reject(req.rid, now)
+                        if tr is not None:
+                            tr.mark("submit", arr, rid=req.rid)
+                            tr.mark("reject", now, rid=req.rid)
                         return False
                     # shed_oldest: evict from the aggregator buffer first
                     # (the overall oldest), then from the pending deque.
@@ -428,6 +457,9 @@ class AsyncScheduler:
                         vrid = victim[1].rid
                         self.n_shed += 1
                         self.metrics.on_shed(vrid, now)
+                        if tr is not None:
+                            tr.mark("shed", now, rid=vrid)
+                            self._admit_t.pop(vrid, None)
                         promoted = None
                         if self._coalescer is not None \
                                 and self.cache.cfg.promote_on_shed:
@@ -437,6 +469,14 @@ class AsyncScheduler:
                             break
                         self.metrics.on_cache("leader_promotions")
                         self.metrics.on_admit(promoted.rid, now)
+                        if tr is not None:
+                            tr.mark("admit", now, rid=promoted.rid,
+                                    promoted_from=vrid)
+                            # queue wait starts where the breakdown's
+                            # does: the follower's recorded arrival
+                            pa = self.metrics.arrival_of(promoted.rid)
+                            self._admit_t[promoted.rid] = \
+                                pa if pa is not None else now
                         # re-admit at the tail of pending (not the
                         # aggregator): evict_oldest drains the aggregator
                         # first, so the promoted leader must not land
@@ -452,6 +492,10 @@ class AsyncScheduler:
                 self.metrics.on_arrival(req.rid, arrival
                                         if arrival is not None else now)
                 self.metrics.on_admit(req.rid, now)
+                if tr is not None:
+                    tr.mark("submit", arr, rid=req.rid)
+                    tr.mark("admit", now, rid=req.rid)
+                    self._admit_t[req.rid] = arr
                 self.metrics.note_queue_depth(self._depth_locked())
                 if key is not None:
                     # admitted leader: claim the key so identical requests
@@ -548,6 +592,11 @@ class AsyncScheduler:
             rep.capacity = {**rep.capacity, **self._controller.summary()}
         return rep
 
+    def trace_report(self) -> Optional[TraceReport]:
+        """Per-stage percentiles + straggler attribution derived from this
+        session's spans (None when tracing is off)."""
+        return self.tracer.report() if self.tracer is not None else None
+
     # -- batcher thread --------------------------------------------------------
     def _take_batch(self) -> Optional[List[Request]]:
         """Block until one batch is ready (target size or deadline) or the
@@ -589,6 +638,15 @@ class AsyncScheduler:
                 pb = self.group.prepare_batch(rs)
                 t1 = self._now()
                 self.metrics.on_encode([r.rid for r in rs], t0, t1)
+                if self.tracer is not None:
+                    rids = [r.rid for r in rs]
+                    # queue wait ends where encode begins — the same t0
+                    # the breakdown uses as encode_start
+                    for rid in rids:
+                        a = self._admit_t.pop(rid, None)
+                        if a is not None:
+                            self.tracer.span("queue_wait", a, t0, rid=rid)
+                    self.tracer.span("encode", t0, t1, rids=rids)
                 # blocks while the routed replica already has
                 # `pipeline_depth` batches in flight — that stall is what
                 # pushes overload back onto the bounded admission queue

@@ -11,15 +11,22 @@ batching, admission control — and one call wires it:
     sched = srv.session()                            # live async serving
     sched.submit(req); ...; sched.result()
 
-This replaces the previous four-object hand-wiring (``LMServer`` +
-``AsyncScheduler`` + ``MetricsCollector`` + ``run_pipelined``); the old
-entry points still work behind ``DeprecationWarning`` shims.
+Or, for the whole build/run/teardown cycle in one call::
+
+    outs, report = serve(requests, replicas=2, cache=True)
+
+``ServeConfig`` + ``build()`` + ``Server.serve()``/``session()`` (and the
+:func:`serve` convenience over them) are the *only* serving entry points —
+the PR-1/PR-2 era ``run_pipelined``/``LMServer.serve_stream`` shims have
+been removed. Optional subsystems all switch on the same way
+(``cache=``/``capacity=``/``trace=`` accept None/bool/dict/config — see
+:mod:`repro.serve.config`).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.serve.cache import (CacheConfig, CachedResult, NegativeResult,
                                ResultCache, request_key)
@@ -30,6 +37,7 @@ from repro.serve.group import EngineGroup, RoutingPolicy
 from repro.serve.metrics import MetricsCollector, RunReport
 from repro.serve.scheduler import (AsyncScheduler, BackpressurePolicy,
                                    SchedulerConfig)
+from repro.serve.trace import TraceConfig, Tracer, TraceReport
 
 
 @dataclass
@@ -43,6 +51,8 @@ class ServeConfig:
       ``server_factory`` — optional ``idx -> engine`` override; when set,
                         ``model``/``max_seq``/... are ignored and one
                         engine is built per replica (simulation, tests).
+      ``warmup``      — batch-size buckets to pre-compile at build time
+                        (``True`` = engine default; ``False`` = skip).
 
     Replica topology (first non-default wins: mesh > devices > replicas):
       ``mesh``/``mesh_axis`` — one replica per mesh slice along the axis
@@ -73,6 +83,14 @@ class ServeConfig:
                         to every live session: online bottleneck
                         diagnosis + adaptive batch-target / replica-set /
                         admission-limit control.
+
+    Tracing (off by default — same bit-identity guarantee):
+      ``trace``       — ``TraceConfig`` (or ``True`` for defaults / a
+                        kwargs dict) recording per-request lifecycle
+                        spans into one shared
+                        :class:`~repro.serve.trace.Tracer` (bounded ring
+                        buffer); read back via :meth:`Server.trace_report`
+                        / :meth:`Server.export_trace`.
     """
     model: Union[str, object] = "llama3.2-3b"
     reduced: bool = True
@@ -81,6 +99,9 @@ class ServeConfig:
     rule_filter: object = None
     pad_batches: bool = True
     server_factory: Optional[Callable[[int], object]] = None
+    # warm these batch-size buckets at build time (True = engine default;
+    # engines without a warmup method, e.g. SimServer, ignore it)
+    warmup: Union[bool, Sequence[int]] = False
     # replica topology
     replicas: int = 1
     devices: Optional[Sequence] = None
@@ -100,17 +121,23 @@ class ServeConfig:
     # capacity control loop (None/False = off, True = defaults,
     # dict/CapacityConfig = explicit knobs)
     capacity: Union[None, bool, dict, CapacityConfig] = None
+    # per-request tracing (None/False = off, True = defaults,
+    # dict/TraceConfig = explicit knobs)
+    trace: Union[None, bool, dict, TraceConfig] = None
 
     def __post_init__(self):
+        # one shared coercion rule for every optional subsystem
+        # (repro.serve.config.coerce)
         self.cache = CacheConfig.coerce(self.cache)
         self.capacity = CapacityConfig.coerce(self.capacity)
+        self.trace = TraceConfig.coerce(self.trace)
 
     def scheduler_config(self, **overrides) -> SchedulerConfig:
         base = dict(target_batch=self.target_batch, deadline=self.deadline,
                     max_queue=self.max_queue, policy=self.policy,
                     pipeline_depth=self.pipeline_depth,
                     routing=self.routing, cache=self.cache,
-                    capacity=self.capacity)
+                    capacity=self.capacity, trace=self.trace)
         base.update(overrides)
         return SchedulerConfig(**base)
 
@@ -131,6 +158,11 @@ class Server:
         # serves hits everywhere
         self.cache: Optional[ResultCache] = \
             ResultCache(cfg.cache) if cfg.cache is not None else None
+        # likewise one Tracer: serve() replays, live sessions, replica
+        # workers, the cache, and the capacity controller all emit onto
+        # the same timeline
+        self.tracer: Optional[Tracer] = \
+            Tracer(cfg.trace) if cfg.trace is not None else None
 
     # -- engine access --------------------------------------------------------
     @property
@@ -179,6 +211,12 @@ class Server:
         deterministically), ``mode="pipelined"`` returns completions
         bit-identical to ``mode="sync"``. Only throughput differs.
 
+        With tracing configured (``ServeConfig.trace``), encode /
+        dispatch / device-execute spans and completion/drop marks land in
+        the server's shared :class:`~repro.serve.trace.Tracer` (submit-
+        side stages only exist in live sessions, so a replayed stream has
+        no queue-wait spans).
+
         With a result cache configured (``ServeConfig.cache``), a
         content-addressed pre-pass runs over the stream first: requests
         whose key is already cached are served without executing
@@ -189,9 +227,6 @@ class Server:
         replays the same hit/miss/eviction sequence — and because minted
         completions carry the leader's exact tokens, the cached run stays
         bit-identical per rid to the uncached one.
-
-        This method subsumes the deprecated ``run_pipelined(...)`` and
-        ``LMServer.serve_stream(pipeline=True)`` entry points.
         """
         if mode not in ("pipelined", "sync"):
             raise ValueError(
@@ -209,7 +244,7 @@ class Server:
         if mode == "pipelined":
             return self.group.run_groups(
                 groups, pipeline_depth=self.cfg.pipeline_depth,
-                metrics=self.metrics)
+                metrics=self.metrics, tracer=self.tracer)
         eng = self.engine
         out: List[Completion] = []
         for rs in groups:
@@ -222,6 +257,17 @@ class Server:
             self.metrics.on_encode(rids, te0, te1)
             self.metrics.on_device(rids, te1, td1, replica=0)
             self.metrics.on_complete([c.rid for c in comps], td1)
+            if self.tracer is not None:
+                self.tracer.span("encode", te0, te1, rids=rids)
+                self.tracer.span("device_execute", te1, td1, replica=0,
+                                 rids=rids)
+                done = {c.rid for c in comps}
+                for c in comps:
+                    self.tracer.mark("complete", td1, rid=c.rid, replica=0)
+                for rid in rids:
+                    if rid not in done:            # MCT filter drop
+                        self.tracer.mark("drop", td1, rid=rid, replica=0,
+                                         reason="filtered")
             out.extend(comps)
         return out
 
@@ -251,23 +297,40 @@ class Server:
                 # content is known-filtered (negative cache): drop it
                 # without encoding or executing, like the engine would
                 self.metrics.on_cache("negative_hits")
+                if self.tracer is not None:
+                    t = time.perf_counter()
+                    self.tracer.mark("cache_lookup", t, rid=r.rid,
+                                     outcome="negative_hit")
+                    self.tracer.mark("negative_drop", t, rid=r.rid)
                 continue
             if entry is not None:
                 hits.append((r, entry))
                 t = time.perf_counter()
                 self.metrics.on_cache_hit(r.rid, t, replica=entry.replica)
                 self.metrics.on_complete([r.rid], t)
+                if self.tracer is not None:
+                    self.tracer.mark("cache_lookup", t, rid=r.rid,
+                                     outcome="hit")
+                    self.tracer.mark("complete", t, rid=r.rid,
+                                     source="cache")
                 continue
             lead = stream_leader.get(key) if coalesce else None
             if lead is not None and (ttl is None
                                      or r.arrival - lead[1] <= ttl):
                 followers.setdefault(lead[0], []).append(r)
-                self.metrics.on_coalesce(r.rid, lead[0], time.perf_counter())
+                t = time.perf_counter()
+                self.metrics.on_coalesce(r.rid, lead[0], t)
+                if self.tracer is not None:
+                    self.tracer.mark("coalesce", t, rid=r.rid,
+                                     leader=lead[0])
                 continue
             stream_leader[key] = (r.rid, r.arrival)
             key_of[r.rid] = key
             leaders.append(r)
             self.metrics.on_cache_miss(r.rid)
+            if self.tracer is not None:
+                self.tracer.mark("cache_lookup", time.perf_counter(),
+                                 rid=r.rid, outcome="miss")
         comps = self._execute_stream(leaders, mode) if leaders else []
         done = {c.rid: c for c in comps}
         out: List[Completion] = list(comps)
@@ -280,6 +343,11 @@ class Server:
                 # same doomed content skips execution on its next arrival
                 if foll:
                     self.metrics.on_cache("follower_drops", len(foll))
+                    if self.tracer is not None:
+                        t = time.perf_counter()
+                        for f in foll:
+                            self.tracer.mark("follower_drop", t,
+                                             rid=f.rid, leader=r.rid)
                 self.cache.put_negative(key_of[r.rid], r.arrival,
                                         metrics=self.metrics)
                 continue
@@ -290,6 +358,9 @@ class Server:
             for f in foll:
                 out.append(entry.mint(f.rid))
                 self.metrics.on_complete([f.rid], t)
+                if self.tracer is not None:
+                    self.tracer.mark("complete", t, rid=f.rid,
+                                     source="coalesce")
         out.extend(entry.mint(r.rid) for r, entry in hits)
         self.metrics.note_cache_bytes(self.cache.bytes_resident,
                                       len(self.cache))
@@ -304,7 +375,7 @@ class Server:
         return AsyncScheduler(
             self.group, self.cfg.scheduler_config(**overrides),
             metrics=metrics if metrics is not None else MetricsCollector(),
-            cache=self.cache)
+            cache=self.cache, tracer=self.tracer)
 
     def submit(self, req: Request, **kw) -> bool:
         """Submit to the server's default live session (created lazily,
@@ -312,7 +383,8 @@ class Server:
         if self._session is None:
             self._session = AsyncScheduler(
                 self.group, self.cfg.scheduler_config(),
-                metrics=self.metrics, cache=self.cache)
+                metrics=self.metrics, cache=self.cache,
+                tracer=self.tracer)
         return self._session.submit(req, **kw)
 
     def result(self) -> List[Completion]:
@@ -344,33 +416,86 @@ class Server:
                                           len(self.cache))
         return self.metrics.report(offered_qps=offered_qps)
 
+    # -- tracing ---------------------------------------------------------------
+    def trace_report(self) -> Optional[TraceReport]:
+        """Per-stage latency percentiles + per-replica straggler
+        attribution derived from the shared tracer's spans; None when
+        ``ServeConfig.trace`` is off."""
+        return self.tracer.report() if self.tracer is not None else None
+
+    def export_trace(self, path: str, *, fmt: str = "chrome") -> str:
+        """Write the recorded spans: ``fmt="chrome"`` (load the file in
+        ``chrome://tracing`` / Perfetto) or ``fmt="jsonl"`` (one span per
+        line). Returns ``path``."""
+        if self.tracer is None:
+            raise RuntimeError(
+                "tracing is off; enable with ServeConfig(trace=True)")
+        if fmt == "chrome":
+            return self.tracer.export_chrome(path)
+        if fmt == "jsonl":
+            return self.tracer.export_jsonl(path)
+        raise ValueError(f"fmt must be 'chrome' or 'jsonl', got {fmt!r}")
+
 
 def build(cfg: ServeConfig) -> Server:
     """Construct the full serving stack from one config: engines (or take
     them from ``cfg.server_factory``), the replica :class:`EngineGroup`,
-    and the shared :class:`MetricsCollector` — replacing the previous
-    ``LMServer``/``AsyncScheduler``/``MetricsCollector``/``run_pipelined``
-    hand-wiring."""
+    and the shared :class:`MetricsCollector`."""
     if cfg.server_factory is not None:
         servers = [cfg.server_factory(i) for i in range(max(1, cfg.replicas))]
         group = EngineGroup.from_servers(servers, routing=cfg.routing,
                                          delay=cfg.delay)
-        return Server(group, cfg)
-
-    model = cfg.model
-    if isinstance(model, str):
-        from repro.configs.base import get_config
-        model = get_config(model)
-    if cfg.reduced:
-        model = model.reduced()
-    server = LMServer(model, max_seq=cfg.max_seq, seed=cfg.seed,
-                      rule_filter=cfg.rule_filter,
-                      pad_batches=cfg.pad_batches)
-    if cfg.mesh is not None:
-        group = EngineGroup.from_mesh(server, cfg.mesh, axis=cfg.mesh_axis,
-                                      routing=cfg.routing, delay=cfg.delay)
+        srv = Server(group, cfg)
     else:
-        group = EngineGroup.from_server(server, devices=cfg.devices,
-                                        replicas=cfg.replicas,
-                                        routing=cfg.routing, delay=cfg.delay)
-    return Server(group, cfg)
+        model = cfg.model
+        if isinstance(model, str):
+            from repro.configs.base import get_config
+            model = get_config(model)
+        if cfg.reduced:
+            model = model.reduced()
+        server = LMServer(model, max_seq=cfg.max_seq, seed=cfg.seed,
+                          rule_filter=cfg.rule_filter,
+                          pad_batches=cfg.pad_batches)
+        if cfg.mesh is not None:
+            group = EngineGroup.from_mesh(server, cfg.mesh,
+                                          axis=cfg.mesh_axis,
+                                          routing=cfg.routing,
+                                          delay=cfg.delay)
+        else:
+            group = EngineGroup.from_server(server, devices=cfg.devices,
+                                            replicas=cfg.replicas,
+                                            routing=cfg.routing,
+                                            delay=cfg.delay)
+        srv = Server(group, cfg)
+    if cfg.warmup:
+        srv.warmup() if cfg.warmup is True else srv.warmup(tuple(cfg.warmup))
+    return srv
+
+
+def serve(requests: Sequence[Request], *, mode: str = "pipelined",
+          offered_qps: Optional[float] = None,
+          config: Optional[ServeConfig] = None,
+          **config_kwargs) -> Tuple[List[Completion], RunReport]:
+    """One-call serving: build the stack, serve the stream, tear it down.
+
+    Keyword arguments are :class:`ServeConfig` fields (or pass a prebuilt
+    ``config``); the server is built, the requests are served in ``mode``
+    (``"pipelined"``/``"sync"``), the pipeline threads are reaped via the
+    context manager, and ``(completions, RunReport)`` is returned::
+
+        outs, report = serve(reqs, model="llama3.2-3b", replicas=2,
+                             cache=True, trace=True)
+
+    This is the convenience layer over ``build(cfg)`` + ``Server.serve``;
+    use those directly when you need live sessions, a shared server
+    across calls, or trace exports (the built ``Server`` owns the
+    tracer).
+    """
+    if config is None:
+        config = ServeConfig(**config_kwargs)
+    elif config_kwargs:
+        raise ValueError("pass either config or keyword overrides")
+    with build(config) as srv:
+        outs = srv.serve(requests, mode=mode)
+        report = srv.report(offered_qps=offered_qps)
+    return outs, report

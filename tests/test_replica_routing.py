@@ -228,8 +228,8 @@ def test_mesh_replicas_bit_identical_on_two_devices():
     workload = SyntheticWorkload(vocab=server.cfg.vocab, prompt_len=6,
                                  max_new_tokens=3, seed=1)
     reqs = OpenLoopGen(workload, qps=200.0, n=10, seed=7).requests()
-    sync = server.serve_stream(reqs, target_batch=4, deadline=0.01)
     groups = server.form_batches(reqs, target_batch=4, deadline=0.01)
+    sync = [c for rs in groups for c in server.generate_batch(rs)]
     sharded = group.run_groups(groups)
     by_sync = {c.rid: c for c in sync}
     for c in sharded:

@@ -5,9 +5,30 @@ import numpy as np
 import pytest
 
 from repro.configs.base import get_config
-from repro.serve import (AsyncScheduler, ClosedLoopGen, LMServer,
-                         MetricsCollector, OpenLoopGen, SchedulerConfig,
-                         SyntheticWorkload, poisson_arrivals)
+from repro.serve import (AsyncScheduler, ClosedLoopGen, EngineGroup,
+                         LMServer, MetricsCollector, OpenLoopGen,
+                         SchedulerConfig, SyntheticWorkload,
+                         form_batch_groups, poisson_arrivals)
+
+
+def run_sync(server, reqs, *, target_batch, deadline):
+    """Synchronous baseline: form batches with the paper's deadline policy,
+    then run them one at a time (the device idles during host encode)."""
+    out = []
+    for rs in form_batch_groups(reqs, target_batch=target_batch,
+                                deadline=deadline):
+        out.extend(server.generate_batch(rs))
+    return out
+
+
+def run_pipe(server, reqs, *, target_batch, deadline, devices=None,
+             metrics=None):
+    """Pipelined replay of the same batch groups through EngineGroup —
+    the implementation behind ``Server.serve(mode="pipelined")``."""
+    groups = form_batch_groups(reqs, target_batch=target_batch,
+                               deadline=deadline)
+    group = EngineGroup.from_server(server, devices=devices)
+    return group.run_groups(groups, metrics=metrics)
 
 
 @pytest.fixture(scope="module")
@@ -35,9 +56,8 @@ def test_async_identical_to_sync_baseline(server, workload):
     """(c) The pipelined path must be bit-identical to the synchronous
     baseline for the same request stream."""
     reqs = OpenLoopGen(workload, qps=200.0, n=12, seed=7).requests()
-    sync = server.serve_stream(reqs, target_batch=4, deadline=0.01)
-    pipe = server.serve_stream(reqs, target_batch=4, deadline=0.01,
-                               pipeline=True)
+    sync = run_sync(server, reqs, target_batch=4, deadline=0.01)
+    pipe = run_pipe(server, reqs, target_batch=4, deadline=0.01)
     assert len(sync) == len(pipe) == 12
     by_sync = {c.rid: c for c in sync}
     for c in pipe:
@@ -83,8 +103,7 @@ def test_open_loop_low_qps_small_batches(server, workload):
     batches stay well under target size (logical-time replay)."""
     gen = OpenLoopGen(workload, qps=10.0, n=12, seed=3)
     reqs = gen.requests()   # mean gap 100 ms >> 5 ms deadline
-    outs = server.serve_stream(reqs, target_batch=8, deadline=0.005,
-                               pipeline=True)
+    outs = run_pipe(server, reqs, target_batch=8, deadline=0.005)
     assert len(outs) == 12
     assert max(o.batch_size for o in outs) <= 2
 
@@ -119,8 +138,7 @@ def test_scheduler_tokens_match_solo_generation(server, workload):
 def test_metrics_breakdown_complete(server, workload):
     metrics = MetricsCollector()
     reqs = OpenLoopGen(workload, qps=500.0, n=8, seed=11).requests()
-    server.serve_stream(reqs, target_batch=4, deadline=0.01,
-                        pipeline=True, metrics=metrics)
+    run_pipe(server, reqs, target_batch=4, deadline=0.01, metrics=metrics)
     rep = metrics.report(offered_qps=500.0)
     assert rep.n_completed == 8
     for part in ("encode", "device", "total"):
@@ -196,9 +214,9 @@ def test_multi_device_round_robin_identical(server, workload):
     """CI matrix job: batches round-robin across host devices and still
     produce bit-identical completions."""
     reqs = OpenLoopGen(workload, qps=200.0, n=10, seed=7).requests()
-    sync = server.serve_stream(reqs, target_batch=4, deadline=0.01)
-    multi = server.serve_stream(reqs, target_batch=4, deadline=0.01,
-                                pipeline=True, devices=jax.devices())
+    sync = run_sync(server, reqs, target_batch=4, deadline=0.01)
+    multi = run_pipe(server, reqs, target_batch=4, deadline=0.01,
+                     devices=jax.devices())
     by_sync = {c.rid: c for c in sync}
     for c in multi:
         np.testing.assert_array_equal(by_sync[c.rid].tokens, c.tokens)

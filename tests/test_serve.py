@@ -37,10 +37,12 @@ def test_batch_independence(server):
     np.testing.assert_array_equal(solo.tokens, pair.tokens)
 
 
-def test_serve_stream_batches_by_deadline(server):
+def test_form_batches_by_deadline(server):
     reqs = [Request(rid=i, tokens=np.asarray([1 + i, 2, 3], np.int32),
                     max_new_tokens=3, arrival=i * 0.001) for i in range(6)]
-    outs = server.serve_stream(reqs, target_batch=4, deadline=0.01)
+    outs = [c for rs in server.form_batches(reqs, target_batch=4,
+                                            deadline=0.01)
+            for c in server.generate_batch(rs)]
     assert len(outs) == 6
     sizes = sorted({o.batch_size for o in outs})
     assert sizes == [2, 4]          # one full batch + one deadline flush
@@ -80,7 +82,7 @@ def test_rule_filter_drops_infeasible():
     bad = Request(rid=1, tokens=np.asarray([1, 2], np.int32),
                   max_new_tokens=2, mct_queries=[qs[1]],
                   connect_minutes=[0])
-    outs = srv.serve_stream([good, bad], target_batch=2, deadline=0.1)
+    outs = srv.generate_batch([good, bad])
     assert [o.rid for o in outs] == [0]
 
     # same pair through the live async scheduler: the filtered request

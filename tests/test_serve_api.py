@@ -1,11 +1,11 @@
 """Unified serving front end: ServeConfig/build facade, Server.serve modes,
-BackpressurePolicy enum, deprecation shims for the old entry points."""
+BackpressurePolicy enum, serve() one-call convenience, removed-shim audit."""
 import numpy as np
 import pytest
 
 from repro.serve import (BackpressurePolicy, OpenLoopGen, SchedulerConfig,
                          ServeConfig, SimServer, SyntheticWorkload, build,
-                         run_pipelined, sim_requests)
+                         serve, sim_requests)
 
 
 @pytest.fixture(scope="module")
@@ -90,27 +90,55 @@ def test_policy_validation_error_lists_valid_values():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims for the collapsed entry points
+# the PR-1/PR-2 era shims are gone — the unified surface is the only one
 # ---------------------------------------------------------------------------
 
-def test_run_pipelined_shim_warns_and_matches(srv, workload):
-    reqs = workload.build(6, rid_base=700)
-    groups = srv.engine.form_batches(reqs, target_batch=4, deadline=0.01)
-    with pytest.warns(DeprecationWarning, match="run_pipelined"):
-        old = run_pipelined(srv.engine, groups)
-    new = srv.group.run_groups(groups)
-    by_old = {c.rid: c for c in old}
-    assert sorted(by_old) == sorted(c.rid for c in new)
-    for c in new:
-        np.testing.assert_array_equal(by_old[c.rid].tokens, c.tokens)
+def test_deprecated_entry_points_removed(srv):
+    import repro.serve as S
+    assert not hasattr(S, "run_pipelined")
+    assert not hasattr(S.scheduler, "run_pipelined")
+    assert not hasattr(srv.engine, "serve_stream")
 
 
-def test_serve_stream_pipeline_true_warns(srv, workload):
-    reqs = workload.build(4, rid_base=800)
-    with pytest.warns(DeprecationWarning, match="serve_stream"):
-        outs = srv.engine.serve_stream(reqs, target_batch=4, deadline=0.01,
-                                       pipeline=True)
+# ---------------------------------------------------------------------------
+# serve() one-call convenience
+# ---------------------------------------------------------------------------
+
+def test_serve_convenience_returns_completions_and_report():
+    outs, rep = serve(
+        sim_requests(12), replicas=2, target_batch=4, deadline=1.0,
+        server_factory=lambda i: SimServer(device_ms_per_batch=1.0))
+    assert len(outs) == 12
+    assert rep.n_completed == 12
+    assert rep.breakdown["device"].n == 12
+
+
+def test_serve_convenience_config_xor_kwargs():
+    cfg = ServeConfig(server_factory=lambda i: SimServer(), target_batch=4,
+                      deadline=1.0)
+    outs, rep = serve(sim_requests(4), config=cfg)
     assert len(outs) == 4
+    with pytest.raises(ValueError, match="config"):
+        serve(sim_requests(2), config=cfg, replicas=2)
+
+
+def test_build_warmup_knob():
+    class WarmSpy(SimServer):
+        warmed = None
+
+        def warmup(self, batch_sizes=(1, 8)):
+            self.warmed = tuple(batch_sizes)
+
+    srv = build(ServeConfig(server_factory=lambda i: WarmSpy(), replicas=2,
+                            warmup=(2, 4)))
+    assert all(e.warmed == (2, 4) for e in srv.engines)
+    assert build(ServeConfig(server_factory=lambda i: WarmSpy(),
+                             warmup=True)).engine.warmed == (1, 8)
+    # default stays off; engines without warmup (plain SimServer) tolerate
+    # the knob
+    assert build(ServeConfig(
+        server_factory=lambda i: WarmSpy())).engine.warmed is None
+    build(ServeConfig(server_factory=lambda i: SimServer(), warmup=True))
 
 
 def test_server_facade_works_with_sim_factory():
