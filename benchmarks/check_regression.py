@@ -1,0 +1,115 @@
+"""Bench-regression gate: compare a fresh BENCH_endtoend.json against the
+committed baseline and fail CI when a throughput section regressed.
+
+Only the *simulation-clock* sections are compared — replica scaling, cache
+hit-rate, capacity control, and routing-policy sweeps are dominated by
+``SimServer`` sleeps, so their qps is stable across CI machines. The
+open-loop load points (``fig13_load_*``), the pipeline-overlap inset, and
+raw ``us_per_call`` timings are machine-dependent and deliberately
+skipped.
+
+A section regresses when its fresh throughput drops below
+``(1 - tolerance)`` of the baseline (default tolerance 15%). A baseline
+metric *missing* from the fresh run also fails — a sweep that silently
+stopped running is a regression of the harness, not an improvement.
+Metrics new in the fresh run (not yet in the baseline) pass with a note,
+so sections can be added without a chicken-and-egg dance.
+
+Run:  python benchmarks/check_regression.py \
+          --baseline BENCH_baseline.json --fresh BENCH_endtoend.json
+"""
+import argparse
+import json
+import sys
+
+# throughput metrics (higher is better), keyed "section[point].metric"
+_SKIPPED_PREFIXES = ("fig13_load_", "fig13_pipeline_overlap",
+                     "fig14_", "fig13_cache_", "fig13_routing_")
+
+
+def collect_metrics(payload: dict) -> dict:
+    """Flatten a BENCH_endtoend.json payload into comparable qps metrics.
+
+    Returns ``{"section[point].metric": float}`` for every simulation-
+    clock throughput number the payload carries.
+    """
+    out = {}
+    for r in payload.get("results", []):
+        name = r.get("name", "")
+        if any(name.startswith(p) for p in _SKIPPED_PREFIXES):
+            continue
+        if "achieved_qps" in r:     # fig13_replicas_{r}
+            out[f"replicas[{name}].achieved_qps"] = float(r["achieved_qps"])
+    for p in payload.get("cache", []):
+        key = f"cache[alpha={p['repeat_alpha']:g}," \
+              f"{'on' if p['cached'] else 'off'}]"
+        out[f"{key}.effective_qps"] = float(p["effective_qps"])
+    for p in payload.get("routing", []):
+        key = f"routing[{p['scenario']}/{p['policy']}]"
+        out[f"{key}.effective_qps"] = float(p["effective_qps"])
+    for p in payload.get("capacity", []):
+        if not p.get("profile"):    # cost-report entry, not a sweep point
+            continue
+        key = f"capacity[{p['profile']}]"
+        if "controlled_qps" in p:
+            out[f"{key}.controlled_qps"] = float(p["controlled_qps"])
+        if "best_static_qps" in p:
+            out[f"{key}.best_static_qps"] = float(p["best_static_qps"])
+    return out
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float) -> list:
+    """Return a list of human-readable failure strings (empty = pass)."""
+    base_m = collect_metrics(baseline)
+    fresh_m = collect_metrics(fresh)
+    failures = []
+    for key in sorted(base_m):
+        base_v = base_m[key]
+        if key not in fresh_m:
+            failures.append(
+                f"MISSING {key}: present in baseline ({base_v:.0f} qps) "
+                f"but absent from the fresh run — did its sweep run?")
+            continue
+        fresh_v = fresh_m[key]
+        floor = base_v * (1.0 - tolerance)
+        if fresh_v < floor:
+            pct = (fresh_v / base_v - 1.0) * 100.0
+            failures.append(
+                f"REGRESSION in {key}: {fresh_v:.0f} qps is {pct:+.1f}% "
+                f"vs baseline {base_v:.0f} qps "
+                f"(floor {floor:.0f} at tolerance {tolerance:.0%})")
+    for key in sorted(set(fresh_m) - set(base_m)):
+        print(f"note: new metric {key} = {fresh_m[key]:.0f} qps "
+              f"(no baseline yet)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_endtoend.json to compare against")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly generated BENCH_endtoend.json")
+    ap.add_argument("--tolerance", type=float, default=0.15, metavar="FRAC",
+                    help="allowed fractional qps drop per section "
+                         "(default: 0.15)")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures = compare(baseline, fresh, args.tolerance)
+    n = len(collect_metrics(baseline))
+    if failures:
+        print(f"bench regression check: {len(failures)} failure(s) "
+              f"across {n} baseline metric(s)")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    print(f"bench regression check: OK ({n} baseline metric(s) within "
+          f"{args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

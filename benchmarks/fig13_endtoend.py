@@ -67,6 +67,23 @@ CACHE_REPLICAS = 4
 # hit-rate sweep points for the BENCH_endtoend.json "cache" section
 CACHE_POINTS = []
 
+# routing sweep: repeat-heavy Zipf traffic (alpha >= 1.1) recomputed wave
+# after wave (TTL expiry between waves), with and without an injected
+# straggler, under each routing policy. Device cost uses SimServer's
+# warm-content model so *placement* matters: recomputing a key on the
+# replica that produced it runs at warm cost
+ROUTING_POLICIES_SWEPT = ("least_loaded", "sticky", "hit_aware")
+ROUTING_ALPHA = 1.1
+ROUTING_REPLICAS = 4
+ROUTING_WAVES = 3
+ROUTING_N = 256                 # requests per wave
+ROUTING_UNIQUE = 96             # Zipf key population
+ROUTING_TTL = 5.0               # logical seconds; waves arrive 4x apart
+ROUTING_STRAGGLER_S = 0.05      # injected delay per batch on replica 0
+ROUTING_WARM_FACTOR = 0.25      # warm recompute costs 25% of cold
+# sweep points for the BENCH_endtoend.json "routing" section
+ROUTING_POINTS = []
+
 
 def _server():
     from repro.serve import ServeConfig, build
@@ -176,6 +193,98 @@ def cache_sweep(repeat_alphas=CACHE_ALPHAS, replicas=CACHE_REPLICAS):
                  report=rep.as_dict(), **point)
 
 
+def routing_sweep(policies=ROUTING_POLICIES_SWEPT,
+                  repeat_alpha=ROUTING_ALPHA):
+    """Routing-policy shoot-out on repeat-heavy recompute traffic.
+
+    ``ROUTING_WAVES`` waves of the same Zipf key population arrive with
+    gaps larger than the cache TTL, so every wave past the first
+    recomputes expired content and the router decides *where*. Each
+    replica's SimServer runs with the warm-content model
+    (``warm_factor``): recomputing a key on the replica that produced it
+    is cheap, elsewhere it is cold — which is precisely the placement
+    signal ``hit_aware`` reads from the cache's affinity tombstones.
+
+    Two scenarios per policy: ``repeat`` (all replicas healthy — affinity
+    placement should win on warmth) and ``straggler`` (replica 0 delayed
+    via ``DelayInjector`` — hit-aware must *spill away* from the slow
+    owner instead of chasing warmth into it). Outputs stay bit-identical
+    across policies; only wall time moves.
+    """
+    from repro.ft.failures import DelayInjector
+    from repro.serve import (CacheConfig, ServeConfig, SimServer, build,
+                             sim_requests)
+    import numpy as np
+
+    scenarios = (("repeat", None),
+                 ("straggler", DelayInjector({0: ROUTING_STRAGGLER_S})))
+    for scenario, delay in scenarios:
+        for policy in policies:
+            cfg = ServeConfig(
+                replicas=ROUTING_REPLICAS, routing=policy,
+                target_batch=TARGET_BATCH, deadline=1.0,
+                cache=CacheConfig(ttl=ROUTING_TTL),
+                # two full batches of outstanding-work gap spill (one
+                # 8x(8+4) batch is 96 work units): a one-batch gap is
+                # normal pipelining, not imbalance. Straggler avoidance
+                # rides the EWMA, which the group persists across waves
+                spill_threshold=128,
+                delay=delay,
+                server_factory=lambda i: SimServer(
+                    host_ms_per_batch=1.0,
+                    device_ms_per_batch=0.5,
+                    device_ms_per_token=1.0,
+                    warm_factor=ROUTING_WARM_FACTOR))
+            srv = build(cfg)
+            t0 = time.perf_counter()
+            outs = []
+            for w in range(ROUTING_WAVES):
+                # fresh rids per wave, identical contents (content_seed);
+                # the +w+1 rid offset keeps sticky off replica 0 so the
+                # straggler scenario is conservative for the comparison.
+                # Arrival gaps (20 s logical) exceed the 5 s TTL, so every
+                # wave past the first recomputes through the router.
+                base = w * 20.0
+                # each wave opens with w batches of never-repeating filler
+                # (fresh uniform contents per wave): background traffic
+                # that shifts where in the round-robin order the repeat
+                # keys arrive. Content-blind placement then lands them on
+                # a different (cold) replica each wave — only ownership-
+                # tracking routing can keep recomputes warm
+                fill = sim_requests(
+                    w * TARGET_BATCH, max_new_tokens=4,
+                    rid_base=(10 + w) * 100_000,
+                    content_seed=5000 + 17 * w,
+                    arrivals=base + np.arange(w * TARGET_BATCH) * 1e-3)
+                wave = sim_requests(
+                    ROUTING_N, max_new_tokens=4,
+                    rid_base=w * ROUTING_N + w + 1,
+                    unique_keys=ROUTING_UNIQUE, repeat_alpha=repeat_alpha,
+                    content_seed=211,
+                    arrivals=base + (w * TARGET_BATCH
+                                     + np.arange(ROUTING_N)) * 1e-3)
+                outs.extend(srv.serve(fill + wave, mode="pipelined"))
+            dt = time.perf_counter() - t0
+            qps = len(outs) / dt
+            rep = srv.report()
+            point = dict(scenario=scenario, policy=policy,
+                         repeat_alpha=repeat_alpha,
+                         n_requests=len(outs), effective_qps=qps,
+                         affinity_hits=rep.affinity_hits,
+                         affinity_spills=rep.affinity_spills,
+                         n_batches_executed=len(rep.batch_sizes),
+                         replica_batches={str(k): v.n_batches for k, v in
+                                          sorted(rep.per_replica.items())})
+            ROUTING_POINTS.append(point)
+            emit(f"fig13_routing_{scenario}_{policy}",
+                 dt / len(outs) * 1e6,
+                 f"scenario={scenario} policy={policy} qps={qps:.0f} "
+                 f"affinity={rep.affinity_hits}hit/"
+                 f"{rep.affinity_spills}spill "
+                 f"batches={len(rep.batch_sizes)}",
+                 report=rep.as_dict(), **point)
+
+
 def run():
     from repro.serve import OpenLoopGen, SyntheticWorkload
 
@@ -240,6 +349,10 @@ if __name__ == "__main__":
                     metavar="A",
                     help="Zipf key-reuse skews for the cache sweep "
                          f"(default: {' '.join(map(str, CACHE_ALPHAS))})")
+    ap.add_argument("--routing", action="store_true",
+                    help="run only the routing-policy sweep (repeat-heavy "
+                         "recompute traffic x least_loaded/sticky/"
+                         "hit_aware, with and without a straggler)")
     ap.add_argument("--json", nargs="?", const="BENCH_endtoend.json",
                     default="BENCH_endtoend.json", metavar="PATH",
                     help="write structured results (default: "
@@ -249,12 +362,16 @@ if __name__ == "__main__":
     if args.cache:
         cache_sweep(tuple(args.repeat_alpha) if args.repeat_alpha
                     else CACHE_ALPHAS)
+    elif args.routing:
+        routing_sweep(repeat_alpha=args.repeat_alpha[0]
+                      if args.repeat_alpha else ROUTING_ALPHA)
     elif args.replicas:
         replica_sweep(tuple(args.replicas))
     else:
         run()
     payload = {"suites": ["fig13"], "failed": [],
-               "results": common.RESULTS, "cache": CACHE_POINTS}
+               "results": common.RESULTS, "cache": CACHE_POINTS,
+               "routing": ROUTING_POINTS}
     try:
         # merge into an existing run (CI writes the load/replica sweep via
         # benchmarks.run first, then adds the cache sweep on top)
@@ -264,6 +381,7 @@ if __name__ == "__main__":
         payload["failed"] = prev.get("failed", [])
         payload["results"] = prev.get("results", []) + common.RESULTS
         payload["cache"] = prev.get("cache", []) + CACHE_POINTS
+        payload["routing"] = prev.get("routing", []) + ROUTING_POINTS
         for key, val in prev.items():
             # sections other harnesses wrote (capacity, trace, ...)
             payload.setdefault(key, val)

@@ -13,6 +13,7 @@ with a sharded-serving sweep: simulated engine replicas behind the same
 admission path, scaling until the serial host prepare path saturates.
 
 Run:  PYTHONPATH=src python examples/async_serving.py
+      PYTHONPATH=src python examples/async_serving.py --smoke   # CI-sized
 """
 import time
 
@@ -20,7 +21,13 @@ from repro.serve import (OpenLoopGen, ClosedLoopGen, ServeConfig, SimServer,
                          SyntheticWorkload, build, serve, sim_requests)
 
 
-def main():
+def main(smoke: bool = False):
+    # --smoke shrinks every sweep to CI size: same code paths, same
+    # printed shape, a fraction of the wall time
+    fractions = (0.5, 2.0) if smoke else (0.25, 0.5, 1.0, 2.0, 4.0)
+    n_open = 32 if smoke else 64
+    n_sim_batches = 12 if smoke else 32
+    replica_counts = (1, 2) if smoke else (1, 2, 4)
     cfg = ServeConfig(model="llama3.2-3b", max_seq=48,
                       target_batch=8, deadline=0.01,
                       max_queue=16, policy="reject",
@@ -37,13 +44,13 @@ def main():
     print(f"measured capacity ~{cap:.0f} q/s at batch 8\n")
 
     print("open-loop sweep (offered load vs achieved / idle / latency):")
-    for frac in (0.25, 0.5, 1.0, 2.0, 4.0):
+    for frac in fractions:
         qps = cap * frac
         # request count must exceed max_queue plus the ~3 batches the
         # pipeline holds in flight, so overload can actually fill the
         # queue and trigger rejections
         sched = srv.session()
-        OpenLoopGen(workload, qps=qps, n=64,
+        OpenLoopGen(workload, qps=qps, n=n_open,
                     seed=int(frac * 100)).drive(sched)
         sched.result()
         rep = sched.report(offered_qps=qps)
@@ -51,13 +58,14 @@ def main():
 
     print("\nclosed-loop (concurrency 16, always-full batches):")
     sched = srv.session(policy="block", deadline=5.0, max_queue=64)
-    ClosedLoopGen(workload, concurrency=16, n=32).drive(sched)
+    ClosedLoopGen(workload, concurrency=16, n=16 if smoke else 32).drive(sched)
     outs = sched.result()
     print(f"  batch sizes: {sorted({o.batch_size for o in outs})}, "
           f"{sched.report().summary()}")
 
     print("\nsync baseline vs pipelined (same stream, bit-identical):")
-    reqs = OpenLoopGen(workload, qps=cap, n=24, seed=5).requests()
+    reqs = OpenLoopGen(workload, qps=cap, n=12 if smoke else 24,
+                       seed=5).requests()
     t0 = time.perf_counter()
     srv.serve(reqs, mode="sync")
     sync_s = time.perf_counter() - t0
@@ -68,8 +76,8 @@ def main():
           f"({sync_s / pipe_s:.2f}x)")
 
     print("\nsharded serving (simulated replicas, shared admission path):")
-    sreqs = sim_requests(32 * 8, max_new_tokens=4)
-    for r in (1, 2, 4):
+    sreqs = sim_requests(n_sim_batches * 8, max_new_tokens=4)
+    for r in replica_counts:
         # one-call convenience: build -> serve -> teardown -> report
         outs, rep = serve(
             sreqs, replicas=r, target_batch=8, deadline=1.0,
@@ -92,4 +100,9 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: same code paths, smaller sweeps")
+    main(smoke=ap.parse_args().smoke)

@@ -15,8 +15,10 @@ Modules:
 - ``engine``    — LMServer (prepare/execute split), Request/Completion,
                   form_batch_groups (logical-time batch formation)
 - ``group``     — EngineGroup/Replica: one engine replica per device or
-                  mesh slice, least-outstanding-work / sticky routing,
-                  per-replica host-encode/device-execute pipelines
+                  mesh slice, least-outstanding-work / sticky /
+                  hit-aware (cache-ownership affinity with straggler
+                  spill) routing, per-replica host-encode/device-execute
+                  pipelines
 - ``scheduler`` — AsyncScheduler (bounded admission, BackpressurePolicy
                   REJECT/SHED_OLDEST/BLOCK)
 - ``trace``     — per-request lifecycle tracing: Tracer (bounded ring of

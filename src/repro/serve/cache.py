@@ -92,12 +92,18 @@ class CacheConfig(Coercible):
                           promote its first follower to leader so the
                           flight survives and only one request's worth of
                           work is shed.
+    ``max_affinity``    — bound on the replica-affinity tombstone map:
+                          when a TTL-expired entry is evicted, the replica
+                          that produced it survives as a tombstone hint so
+                          ``hit_aware`` routing can send the recompute back
+                          to the owning replica (0 disables tombstones).
     """
     max_bytes: int = 64 << 20
     ttl: Optional[float] = None
     coalesce: bool = True
     negative_ttl: Optional[float] = None
     promote_on_shed: bool = True
+    max_affinity: int = 4096
 
 
 @dataclass
@@ -160,10 +166,17 @@ class ResultCache:
         self.cfg = CacheConfig.coerce(config) or CacheConfig()
         self._lock = threading.Lock()
         self._entries: "OrderedDict[str, CachedResult]" = OrderedDict()
+        # replica-affinity tombstones: key -> replica that produced the
+        # (since-expired) entry. A TTL expiry is not amnesia about *where*
+        # the content lived — hit_aware routing reads these to send the
+        # recompute back to the owning replica (LRU-bounded separately
+        # from the byte budget; entries are two machine words)
+        self._affinity: "OrderedDict[str, int]" = OrderedDict()
         self.bytes_resident = 0
         self._counts = {"hits": 0, "misses": 0, "stale": 0,
                         "evictions": 0, "stores": 0,
-                        "negative_hits": 0, "negative_stores": 0}
+                        "negative_hits": 0, "negative_stores": 0,
+                        "affinity_rehomes": 0}
 
     def __len__(self) -> int:
         with self._lock:
@@ -192,6 +205,11 @@ class ResultCache:
                     self.bytes_resident -= e.nbytes
                     self._counts["stale"] += 1
                     outcome = "stale"
+                    if not negative and e.replica is not None:
+                        # the result is stale but its *placement* is not:
+                        # leave a tombstone so the recompute can be routed
+                        # back to the replica that produced it
+                        self._remember_affinity_locked(key, e.replica)
                     if metrics is not None:
                         metrics.on_cache("stale")
                         metrics.note_cache_bytes(self.bytes_resident,
@@ -215,6 +233,9 @@ class ResultCache:
             old = self._entries.pop(key, None)
             if old is not None:
                 self.bytes_resident -= old.nbytes
+            # a live entry is the authoritative owner record; any stale
+            # tombstone for the key would shadow it after the next expiry
+            self._affinity.pop(key, None)
             self._entries[key] = entry
             self.bytes_resident += entry.nbytes
             self._counts["stores"] += 1
@@ -267,11 +288,39 @@ class ResultCache:
         with self._lock:
             return key in self._entries
 
+    # -- replica affinity (hit_aware routing) --------------------------------
+    def _remember_affinity_locked(self, key: str, replica: int) -> None:
+        self._affinity.pop(key, None)
+        self._affinity[key] = int(replica)
+        while len(self._affinity) > max(0, self.cfg.max_affinity):
+            self._affinity.popitem(last=False)
+
+    def owner_hint(self, key: str) -> Optional[int]:
+        """The replica whose result last covered ``key``: a live entry's
+        producer, else the tombstone left behind by its TTL expiry. Pure
+        lookup — never counts as a hit/miss, never touches LRU order (a
+        routing probe must not keep an entry artificially fresh)."""
+        with self._lock:
+            e = self._entries.get(key)
+            if isinstance(e, CachedResult) and e.replica is not None:
+                return e.replica
+            return self._affinity.get(key)
+
+    def rehome(self, key: str, replica: int) -> None:
+        """Move ``key``'s affinity to ``replica`` — called when hit_aware
+        routing *spills* away from a straggling/overloaded owner, so
+        subsequent recomputes of the same content follow the work to its
+        new home instead of hammering the old one."""
+        with self._lock:
+            self._counts["affinity_rehomes"] += 1
+            self._remember_affinity_locked(key, replica)
+
     def stats(self) -> Dict[str, int]:
         """Lifetime counters (across every session sharing this cache)."""
         with self._lock:
             return dict(self._counts, bytes_resident=self.bytes_resident,
-                        entries=len(self._entries))
+                        entries=len(self._entries),
+                        affinity_entries=len(self._affinity))
 
 
 class Coalescer:

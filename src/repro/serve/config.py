@@ -23,6 +23,21 @@ from __future__ import annotations
 from typing import Optional, Type, TypeVar
 
 C = TypeVar("C")
+E = TypeVar("E")
+
+
+def coerce_enum(enum_cls: Type[E], value: object, *, field: str) -> E:
+    """Normalise one enum-valued config field (``BackpressurePolicy``,
+    ``RoutingPolicy``): accepts the enum member or its string value, and
+    raises the uniform error message listing the valid values — the enum
+    sibling of :func:`coerce`, so every policy knob rejects typos the
+    same way."""
+    try:
+        return enum_cls(value)
+    except ValueError:
+        valid = [m.value for m in enum_cls]
+        raise ValueError(
+            f"{field} must be one of {valid}, got {value!r}") from None
 
 
 def coerce(cls: Type[C], value: object, *,

@@ -23,6 +23,17 @@ Routing (:class:`RoutingPolicy`):
   makes multi-replica runs deterministically replayable (and, since every
   replica computes the same function, bit-identical to the single-replica
   synchronous baseline).
+- ``hit_aware``    — cache-ownership affinity with a straggler guard: when
+  the shared :class:`~repro.serve.cache.ResultCache` knows which replica
+  produced a batch's content (live entry or the tombstone a TTL expiry
+  leaves behind), prefer that replica — its device-side state for the
+  content is still warm, so the recompute is cheaper there. The preference
+  is *guarded*: if the owner's batch-latency EWMA marks it a straggler
+  (``straggler_factor``× the other active replicas' mean) or its
+  outstanding-work gap over the least-loaded candidate exceeds
+  ``spill_threshold``, the batch spills to the least-loaded healthy
+  replica and the content is re-homed there. Without a cache (or with no
+  hints for the batch), decisions are identical to ``least_loaded``.
 """
 from __future__ import annotations
 
@@ -30,9 +41,11 @@ import enum
 import queue
 import threading
 import time
+from collections import Counter
 from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence
 
+from repro.serve.config import coerce_enum
 from repro.serve.engine import Completion
 
 
@@ -40,6 +53,7 @@ class RoutingPolicy(str, enum.Enum):
     """How the dispatcher picks a replica for the next prepared batch."""
     LEAST_LOADED = "least_loaded"
     STICKY = "sticky"
+    HIT_AWARE = "hit_aware"
 
     def __str__(self) -> str:            # StrEnum parity on py3.10
         return self.value
@@ -79,7 +93,8 @@ class _ReplicaWorker:
                  on_complete: Optional[Callable[[Completion], None]] = None,
                  on_drop: Optional[Callable[[int], None]] = None,
                  clock=time.perf_counter, delay=None,
-                 on_batch_done: Optional[Callable[[int, int], None]] = None,
+                 on_batch_done: Optional[
+                     Callable[[int, int, float], None]] = None,
                  tracer=None):
         self.replica = replica
         self.handoff: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
@@ -162,7 +177,7 @@ class _ReplicaWorker:
                 self.completions.extend(comps)
                 if self.on_batch_done is not None:
                     self.on_batch_done(self.replica.idx,
-                                       batch_work(pb.requests))
+                                       batch_work(pb.requests), t1 - t0)
                 if self.on_complete is not None:
                     for c in comps:
                         self.on_complete(c)
@@ -182,10 +197,13 @@ class GroupRun:
 
     def __init__(self, group: "EngineGroup", *, pipeline_depth: int = 2,
                  metrics=None, clock=time.perf_counter,
-                 on_complete=None, on_drop=None, tracer=None):
+                 on_complete=None, on_drop=None, tracer=None, cache=None):
         self.group = group
         self.metrics = metrics
         self.tracer = tracer
+        self.cache = cache              # ResultCache: hit_aware affinity
+                                        # hints (None = fall back to
+                                        # least_loaded decisions)
         self._clock = clock
         self._workers = [
             _ReplicaWorker(rep, pipeline_depth, metrics,
@@ -196,6 +214,12 @@ class GroupRun:
             for rep in group.replicas]
         self._lock = threading.Lock()
         self._outstanding = [0] * len(self._workers)
+        # per-replica EWMA of device seconds per work unit, fed by the
+        # same t0/t1 the worker hands to metrics/trace — the straggler
+        # signal hit_aware's affinity preference is guarded by. Shared
+        # with (and persisted on) the group, so back-to-back runs keep
+        # what they learned about slow replicas
+        self._ewma: List[Optional[float]] = group._ewma
         self._rr = 0
         self._started = False
         # capacity control: replicas [0, _active) receive new dispatches;
@@ -257,35 +281,103 @@ class GroupRun:
         return self
 
     # -- routing -------------------------------------------------------------
-    def _route(self, pb) -> tuple:
-        """Pick (replica_idx, reason) for a prepared batch (active replicas
-        only)."""
+    def replica_ewma(self) -> List[Optional[float]]:
+        """Per-replica EWMA of device seconds per work unit (None until a
+        replica has executed a batch) — the straggler signal."""
         with self._lock:
-            n = self._active
-        if n == 1:
-            return 0, "single"
-        if self.group.routing == RoutingPolicy.STICKY:
-            return min(r.rid for r in pb.requests) % n, "sticky"
-        with self._lock:
-            loads = self._outstanding[:n]
-        lo = min(loads)
-        cands = [i for i, v in enumerate(loads) if v == lo]
+            return list(self._ewma)
+
+    def _is_straggler_locked(self, idx: int, n: int) -> bool:
+        """Replica ``idx`` is a straggler when its per-work-unit latency
+        EWMA exceeds ``straggler_factor`` times the mean of the *other*
+        active replicas (excluding itself, so one slow replica cannot drag
+        the fleet mean up to its own level and hide)."""
+        mine = self._ewma[idx]
+        if mine is None:
+            return False
+        others = [e for j, e in enumerate(self._ewma[:n])
+                  if j != idx and e is not None]
+        if not others:
+            return False
+        return mine > self.group.straggler_factor * (sum(others)
+                                                     / len(others))
+
+    def _least_loaded_locked(self, loads: List[int],
+                             exclude: Optional[int] = None) -> tuple:
+        """(idx, reason) of the least-loaded candidate, round-robin among
+        ties; ``exclude`` removes one replica from candidacy (the owner a
+        spill is escaping from)."""
+        cands_all = [i for i in range(len(loads)) if i != exclude]
+        lo = min(loads[i] for i in cands_all)
+        cands = [i for i in cands_all if loads[i] == lo]
         if len(cands) == 1:
             return cands[0], "least_loaded"
         i = cands[self._rr % len(cands)]
         self._rr += 1
         return i, "tie_break"
 
-    def _on_batch_done(self, idx: int, work: int):
+    def _route(self, pb) -> tuple:
+        """Pick (replica_idx, reason, affinity_owner) for a prepared batch
+        (active replicas only). ``affinity_owner`` is the cache-derived
+        owner the decision was judged against (None when no hint applied:
+        non-hit_aware policies, cache off, or no owned content)."""
+        with self._lock:
+            n = self._active
+        if n == 1:
+            return 0, "single", None
+        if self.group.routing == RoutingPolicy.STICKY:
+            return min(r.rid for r in pb.requests) % n, "sticky", None
+        if self.group.routing == RoutingPolicy.HIT_AWARE \
+                and self.cache is not None:
+            from repro.serve.cache import request_key
+            keys = [request_key(r) for r in pb.requests]
+            votes = Counter(o for o in (self.cache.owner_hint(k)
+                                        for k in keys)
+                            if o is not None and 0 <= o < n)
+            if votes:
+                # majority owner of the batch's content, lowest index on
+                # ties (deterministic)
+                pref = max(sorted(votes), key=lambda i: votes[i])
+                with self._lock:
+                    loads = self._outstanding[:n]
+                    lo = min(loads)
+                    straggler = self._is_straggler_locked(pref, n)
+                    spill = straggler or (loads[pref] - lo
+                                          > self.group.spill_threshold)
+                    if spill:
+                        idx, _ = self._least_loaded_locked(loads,
+                                                           exclude=pref)
+                    else:
+                        idx = pref
+                if spill:
+                    # re-home the content: follow-up recomputes of these
+                    # keys chase the work to its new replica instead of
+                    # re-testing (and re-failing) the old owner each time
+                    for k in keys:
+                        self.cache.rehome(k, idx)
+                    return idx, "affinity_spill", pref
+                return pref, "affinity_hit", pref
+        with self._lock:
+            loads = self._outstanding[:n]
+            idx, reason = self._least_loaded_locked(loads)
+        return idx, reason, None
+
+    def _on_batch_done(self, idx: int, work: int, elapsed: float):
         with self._lock:
             self._outstanding[idx] -= work
+            if work > 0 and elapsed >= 0:
+                per_unit = elapsed / work
+                prev = self._ewma[idx]
+                a = self.group.ewma_alpha
+                self._ewma[idx] = per_unit if prev is None \
+                    else a * per_unit + (1 - a) * prev
 
     def dispatch(self, pb) -> int:
         """Route one prepared batch to a replica pipeline; blocks when that
         replica's handoff is full (that stall is the backpressure signal
         the admission queue sees). Returns the chosen replica index."""
         self.start()
-        idx, reason = self._route(pb)
+        idx, reason, owner = self._route(pb)
         work = batch_work(pb.requests)
         with self._lock:
             self._outstanding[idx] += work
@@ -293,9 +385,12 @@ class GroupRun:
         if self.metrics is not None:
             self.metrics.on_route(idx, reason)
         if self.tracer is not None:
+            tags = {"reason": reason,
+                    "rids": [r.rid for r in pb.requests]}
+            if owner is not None:
+                tags["owner"] = owner
             self.tracer.mark("dispatch", self._clock(), replica=idx,
-                             reason=reason,
-                             rids=[r.rid for r in pb.requests])
+                             **tags)
         self._workers[idx].put(pb)
         if self.metrics is not None:
             self.metrics.note_replica_depth(
@@ -327,23 +422,39 @@ class EngineGroup:
     per-replica pipelines."""
 
     def __init__(self, replicas: Sequence[Replica], *,
-                 routing=RoutingPolicy.LEAST_LOADED, delay=None):
+                 routing=RoutingPolicy.LEAST_LOADED, delay=None,
+                 spill_threshold: int = 96, straggler_factor: float = 2.0,
+                 ewma_alpha: float = 0.25):
         if not replicas:
             raise ValueError("EngineGroup needs at least one replica")
-        try:
-            self.routing = RoutingPolicy(routing)
-        except ValueError:
+        self.routing = coerce_enum(RoutingPolicy, routing, field="routing")
+        if spill_threshold < 0:
             raise ValueError(
-                f"routing must be one of {list(ROUTING_POLICIES)}, "
-                f"got {routing!r}") from None
+                f"spill_threshold must be >= 0, got {spill_threshold}")
+        if straggler_factor < 1.0:
+            raise ValueError(
+                f"straggler_factor must be >= 1.0, got {straggler_factor}")
+        if not (0.0 < ewma_alpha <= 1.0):
+            raise ValueError(
+                f"ewma_alpha must be in (0, 1], got {ewma_alpha}")
         self.replicas = list(replicas)
         self.delay = delay              # optional DelayInjector (tests/sims)
+        # hit_aware guard knobs (inert under other policies)
+        self.spill_threshold = int(spill_threshold)
+        self.straggler_factor = float(straggler_factor)
+        self.ewma_alpha = float(ewma_alpha)
+        # per-replica EWMA of device seconds per work unit — the straggler
+        # signal. Lives on the *group* (like the cache's affinity map), so
+        # a straggler identified in one run still repels traffic in the
+        # next: runs are often shorter than the time a slow replica needs
+        # to finish its first batch
+        self._ewma: List[Optional[float]] = [None] * len(self.replicas)
 
     # -- constructors --------------------------------------------------------
     @classmethod
     def from_server(cls, server, *, devices=None, replicas=None,
-                    routing=RoutingPolicy.LEAST_LOADED, delay=None
-                    ) -> "EngineGroup":
+                    routing=RoutingPolicy.LEAST_LOADED, delay=None,
+                    **knobs) -> "EngineGroup":
         """Replicas sharing one engine: one per device when ``devices`` is
         given (each pinned), else ``replicas`` colocated copies (host-device
         simulation / single-accelerator default)."""
@@ -352,21 +463,21 @@ class EngineGroup:
                     for i, d in enumerate(devices)]
         else:
             reps = [Replica(i, server) for i in range(max(1, replicas or 1))]
-        return cls(reps, routing=routing, delay=delay)
+        return cls(reps, routing=routing, delay=delay, **knobs)
 
     @classmethod
     def from_servers(cls, servers: Sequence, *,
-                     routing=RoutingPolicy.LEAST_LOADED, delay=None
-                     ) -> "EngineGroup":
+                     routing=RoutingPolicy.LEAST_LOADED, delay=None,
+                     **knobs) -> "EngineGroup":
         """One replica per (distinct) engine — used with simulated engines
         and with independently-built per-device servers."""
         return cls([Replica(i, s) for i, s in enumerate(servers)],
-                   routing=routing, delay=delay)
+                   routing=routing, delay=delay, **knobs)
 
     @classmethod
     def from_mesh(cls, server, mesh, *, axis: str = "data",
-                  routing=RoutingPolicy.LEAST_LOADED, delay=None
-                  ) -> "EngineGroup":
+                  routing=RoutingPolicy.LEAST_LOADED, delay=None,
+                  **knobs) -> "EngineGroup":
         """One replica per slice of ``mesh`` along ``axis`` (see
         :func:`repro.sharding.specs.replica_device_groups`); the devices of
         each slice round-robin within the replica."""
@@ -374,7 +485,7 @@ class EngineGroup:
         groups = replica_device_groups(mesh, axis=axis)
         return cls([Replica(i, server, devices=g)
                     for i, g in enumerate(groups)],
-                   routing=routing, delay=delay)
+                   routing=routing, delay=delay, **knobs)
 
     # -- host-side prepare (replica-agnostic) --------------------------------
     def prepare_batch(self, requests):
@@ -384,13 +495,13 @@ class EngineGroup:
 
     def open(self, *, pipeline_depth: int = 2, metrics=None,
              clock=time.perf_counter, on_complete=None,
-             on_drop=None, tracer=None) -> GroupRun:
+             on_drop=None, tracer=None, cache=None) -> GroupRun:
         return GroupRun(self, pipeline_depth=pipeline_depth, metrics=metrics,
                         clock=clock, on_complete=on_complete,
-                        on_drop=on_drop, tracer=tracer)
+                        on_drop=on_drop, tracer=tracer, cache=cache)
 
     def run_groups(self, groups, *, pipeline_depth: int = 2,
-                   metrics=None, tracer=None) -> List[Completion]:
+                   metrics=None, tracer=None, cache=None) -> List[Completion]:
         """Execute pre-formed batch groups through per-replica pipelines.
 
         Batch composition is fixed by the caller and every replica computes
@@ -400,7 +511,7 @@ class EngineGroup:
         behind ``Server.serve(mode="pipelined")``.
         """
         run = self.open(pipeline_depth=pipeline_depth, metrics=metrics,
-                        tracer=tracer).start()
+                        tracer=tracer, cache=cache).start()
         try:
             for rs in groups:
                 rs = list(rs)

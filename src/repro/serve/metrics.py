@@ -172,6 +172,17 @@ class RunReport:
     # mean_active_replicas
     capacity: Dict[str, object] = field(default_factory=dict)
 
+    @property
+    def affinity_hits(self) -> int:
+        """Batches hit_aware routed to their content's owning replica."""
+        return self.routing.get("affinity_hit", 0)
+
+    @property
+    def affinity_spills(self) -> int:
+        """Batches whose owner preference was overridden (straggler or
+        outstanding-work gap) and whose keys were re-homed."""
+        return self.routing.get("affinity_spill", 0)
+
     def as_dict(self) -> Dict[str, object]:
         return {
             "n_requests": self.n_requests,
@@ -206,6 +217,9 @@ class RunReport:
                    if len(self.per_replica) > 1 else "")
                 + (f", cache hit {self.cache['hit_rate'] * 100:.0f}%"
                    if self.cache else "")
+                + (f", affinity {self.affinity_hits} hit"
+                   f"/{self.affinity_spills} spill"
+                   if self.affinity_hits or self.affinity_spills else "")
                 + (f", diagnosed {self.capacity['diagnosis']}"
                    if self.capacity.get("diagnosis") else "")
                 + (f", p50/p95/p99 {t.p50_ms:.0f}/{t.p95_ms:.0f}/"
@@ -425,7 +439,8 @@ class MetricsCollector:
 
     def on_route(self, replica: int, reason: str):
         """One routing decision: ``reason`` is the router's justification
-        (single / sticky / least_loaded / tie_break)."""
+        (single / sticky / least_loaded / tie_break / affinity_hit /
+        affinity_spill)."""
         with self._lock:
             self._routing[reason] = self._routing.get(reason, 0) + 1
             # replicas that never execute (all work routed away) must still

@@ -12,7 +12,9 @@ too slowly, the CPU saturates first, and end-to-end the system gets slower
 
 The batcher routes each prepared batch to one replica of an
 :class:`~repro.serve.group.EngineGroup` (least-outstanding-work by default,
-``sticky`` for deterministic replay). Every replica keeps its own
+``sticky`` for deterministic replay, ``hit_aware`` for cache-ownership
+affinity with a straggler-guarded spill — see
+:class:`~repro.serve.group.RoutingPolicy`). Every replica keeps its own
 depth-``pipeline_depth`` handoff queue (2 = classic double buffering), so
 host-side encode of batch N+1 overlaps device execution of batch N — and
 with several replicas, host work for one replica overlaps device work on
@@ -54,6 +56,7 @@ from repro.core.aggregator import DeadlineAggregator
 from repro.serve.cache import (CacheConfig, CachedResult, Coalescer,
                                NegativeResult, ResultCache, request_key)
 from repro.serve.capacity import CapacityConfig, CapacityController
+from repro.serve.config import coerce_enum
 from repro.serve.engine import Completion, LMServer, Request
 from repro.serve.group import EngineGroup, RoutingPolicy
 from repro.serve.metrics import MetricsCollector
@@ -85,6 +88,13 @@ class SchedulerConfig:
     devices: Optional[Sequence] = None  # one replica per device
     replicas: Optional[int] = None      # colocated replicas (simulation)
     routing: Union[str, RoutingPolicy] = RoutingPolicy.LEAST_LOADED
+    # hit_aware guard knobs (inert under other routing policies):
+    # outstanding-work gap over the least-loaded candidate beyond which
+    # the affinity preference spills; latency-EWMA multiple of the other
+    # replicas' mean that marks the owner a straggler; EWMA smoothing
+    spill_threshold: int = 96
+    straggler_factor: float = 2.0
+    ewma_alpha: float = 0.25
     # result cache + coalescing (None/False = off, True = defaults,
     # dict/CacheConfig = explicit knobs)
     cache: Union[None, bool, dict, CacheConfig] = None
@@ -102,19 +112,19 @@ class SchedulerConfig:
         self.cache = CacheConfig.coerce(self.cache)
         self.capacity = CapacityConfig.coerce(self.capacity)
         self.trace = TraceConfig.coerce(self.trace)
-        try:
-            self.policy = BackpressurePolicy(self.policy)
-        except ValueError:
-            raise ValueError(
-                f"policy must be one of {list(POLICIES)}, "
-                f"got {self.policy!r}") from None
-        try:
-            self.routing = RoutingPolicy(self.routing)
-        except ValueError:
-            raise ValueError(
-                "routing must be one of "
-                f"{[p.value for p in RoutingPolicy]}, "
-                f"got {self.routing!r}") from None
+        self.policy = coerce_enum(BackpressurePolicy, self.policy,
+                                  field="policy")
+        self.routing = coerce_enum(RoutingPolicy, self.routing,
+                                   field="routing")
+        if self.spill_threshold < 0:
+            raise ValueError(f"spill_threshold must be >= 0, "
+                             f"got {self.spill_threshold}")
+        if self.straggler_factor < 1.0:
+            raise ValueError(f"straggler_factor must be >= 1.0, "
+                             f"got {self.straggler_factor}")
+        if not (0.0 < self.ewma_alpha <= 1.0):
+            raise ValueError(f"ewma_alpha must be in (0, 1], "
+                             f"got {self.ewma_alpha}")
 
 
 class AsyncScheduler:
@@ -149,7 +159,10 @@ class AsyncScheduler:
         else:
             self.group = EngineGroup.from_server(
                 server, devices=config.devices, replicas=config.replicas,
-                routing=config.routing)
+                routing=config.routing,
+                spill_threshold=config.spill_threshold,
+                straggler_factor=config.straggler_factor,
+                ewma_alpha=config.ewma_alpha)
         self.server = self.group.replicas[0].server
         self.metrics = metrics if metrics is not None else MetricsCollector()
         # result cache: an explicit instance (Server shares one across
@@ -203,7 +216,8 @@ class AsyncScheduler:
                                     clock=self._now,
                                     on_complete=self._complete_hook,
                                     on_drop=self._drop_hook,
-                                    tracer=self.tracer)
+                                    tracer=self.tracer,
+                                    cache=self.cache)
         self._batcher = threading.Thread(target=self._batch_loop, daemon=True)
         self._batcher_error: Optional[BaseException] = None
         self._started = False

@@ -59,7 +59,11 @@ class ServeConfig:
                         (see ``repro.sharding.specs.replica_device_groups``).
       ``devices``     — one replica pinned per listed jax device.
       ``replicas``    — N colocated replicas sharing the default device.
-      ``routing``     — ``least_loaded`` (default) or ``sticky``.
+      ``routing``     — ``least_loaded`` (default), ``sticky``, or
+                        ``hit_aware`` (cache-ownership affinity guarded by
+                        ``spill_threshold``/``straggler_factor``/
+                        ``ewma_alpha`` — see
+                        :class:`~repro.serve.group.RoutingPolicy`).
       ``delay``       — optional ``repro.ft.failures.DelayInjector`` applied
                         per replica (straggler studies).
 
@@ -109,6 +113,10 @@ class ServeConfig:
     mesh_axis: str = "data"
     routing: Union[str, RoutingPolicy] = RoutingPolicy.LEAST_LOADED
     delay: object = None
+    # hit_aware guard knobs (inert under other routing policies)
+    spill_threshold: int = 96
+    straggler_factor: float = 2.0
+    ewma_alpha: float = 0.25
     # batching / admission
     target_batch: int = 8
     deadline: float = 0.05
@@ -136,7 +144,10 @@ class ServeConfig:
         base = dict(target_batch=self.target_batch, deadline=self.deadline,
                     max_queue=self.max_queue, policy=self.policy,
                     pipeline_depth=self.pipeline_depth,
-                    routing=self.routing, cache=self.cache,
+                    routing=self.routing,
+                    spill_threshold=self.spill_threshold,
+                    straggler_factor=self.straggler_factor,
+                    ewma_alpha=self.ewma_alpha, cache=self.cache,
                     capacity=self.capacity, trace=self.trace)
         base.update(overrides)
         return SchedulerConfig(**base)
@@ -244,7 +255,8 @@ class Server:
         if mode == "pipelined":
             return self.group.run_groups(
                 groups, pipeline_depth=self.cfg.pipeline_depth,
-                metrics=self.metrics, tracer=self.tracer)
+                metrics=self.metrics, tracer=self.tracer,
+                cache=self.cache)
         eng = self.engine
         out: List[Completion] = []
         for rs in groups:
@@ -441,10 +453,13 @@ def build(cfg: ServeConfig) -> Server:
     """Construct the full serving stack from one config: engines (or take
     them from ``cfg.server_factory``), the replica :class:`EngineGroup`,
     and the shared :class:`MetricsCollector`."""
+    knobs = dict(spill_threshold=cfg.spill_threshold,
+                 straggler_factor=cfg.straggler_factor,
+                 ewma_alpha=cfg.ewma_alpha)
     if cfg.server_factory is not None:
         servers = [cfg.server_factory(i) for i in range(max(1, cfg.replicas))]
         group = EngineGroup.from_servers(servers, routing=cfg.routing,
-                                         delay=cfg.delay)
+                                         delay=cfg.delay, **knobs)
         srv = Server(group, cfg)
     else:
         model = cfg.model
@@ -460,12 +475,12 @@ def build(cfg: ServeConfig) -> Server:
             group = EngineGroup.from_mesh(server, cfg.mesh,
                                           axis=cfg.mesh_axis,
                                           routing=cfg.routing,
-                                          delay=cfg.delay)
+                                          delay=cfg.delay, **knobs)
         else:
             group = EngineGroup.from_server(server, devices=cfg.devices,
                                             replicas=cfg.replicas,
                                             routing=cfg.routing,
-                                            delay=cfg.delay)
+                                            delay=cfg.delay, **knobs)
         srv = Server(group, cfg)
     if cfg.warmup:
         srv.warmup() if cfg.warmup is True else srv.warmup(tuple(cfg.warmup))

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import time
 import zlib
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
@@ -71,13 +72,28 @@ SIM_PROFILES = {
 
 @dataclass
 class SimServer:
-    """LMServer-compatible engine with dialable host/device costs."""
+    """LMServer-compatible engine with dialable host/device costs.
+
+    Warm-content model (``warm_factor < 1``): each instance remembers the
+    last ``warm_keys`` content keys it executed; re-executing one of them
+    costs ``warm_factor`` of the cold per-request device cost — the
+    accelerator-local warm state (resident rule tables, primed buffers)
+    that makes recomputing expired content cheaper *on the replica that
+    produced it*. With per-replica SimServer instances this is exactly the
+    placement signal hit-aware routing exploits; ``warm_factor=1.0``
+    (default) disables the model and keeps costs purely size-driven.
+    Tokens remain content-pure either way — warmth changes *time*, never
+    *bits*."""
     vocab: int = 256
     host_ms_per_batch: float = 1.0
     host_ms_per_request: float = 0.0
     device_ms_per_batch: float = 4.0
     device_ms_per_token: float = 0.0
+    warm_factor: float = 1.0
+    warm_keys: int = 512
     sleep: object = field(default=time.sleep, repr=False)
+    _warm: "OrderedDict" = field(default_factory=OrderedDict, init=False,
+                                 repr=False)
 
     @classmethod
     def from_profile(cls, profile, **overrides) -> "SimServer":
@@ -108,8 +124,23 @@ class SimServer:
         rs = pb.requests
         if not rs:
             return []
-        cost = (self.device_ms_per_batch
-                + self.device_ms_per_token * len(rs) * pb.max_new) * 1e-3
+        per_req = self.device_ms_per_token * pb.max_new
+        if self.warm_factor < 1.0:
+            # warm rows run at a discount; every executed row (re)warms
+            # its content key. _warm is touched only from this instance's
+            # replica worker thread, so no lock is needed
+            keys = [self._content_key(r) for r in rs]
+            n_warm = sum(1 for k in keys if k in self._warm)
+            row_cost = per_req * (len(rs) - n_warm
+                                  + n_warm * self.warm_factor)
+            for k in keys:
+                self._warm.pop(k, None)
+                self._warm[k] = True
+            while len(self._warm) > max(1, self.warm_keys):
+                self._warm.popitem(last=False)
+        else:
+            row_cost = per_req * len(rs)
+        cost = (self.device_ms_per_batch + row_cost) * 1e-3
         if cost > 0:
             self.sleep(cost)
         return [Completion(rid=r.rid,
@@ -123,6 +154,13 @@ class SimServer:
         if not requests:
             return []
         return self.execute_prepared(self.prepare_batch(requests))
+
+    def _content_key(self, r: Request) -> tuple:
+        # same content notion as cache.request_key (tokens + decode
+        # budget), cheap enough to compute per executed row
+        return (zlib.crc32(np.ascontiguousarray(
+            np.asarray(r.tokens, np.int64)).tobytes()),
+            int(r.max_new_tokens))
 
     def _tokens(self, r: Request) -> np.ndarray:
         # deterministic in the request's CONTENT alone (never the rid):

@@ -255,6 +255,13 @@ class TraceReport:
                 if out:
                     k = f"cache_{out}"
                     counts[k] = counts.get(k, 0) + 1
+            if s.stage == "dispatch" and s.meta:
+                # routing-reason breakdown (affinity_hit/affinity_spill/
+                # least_loaded/...) — reconciles with RunReport.routing
+                reason = s.meta.get("reason")
+                if reason:
+                    k = f"dispatch_{reason}"
+                    counts[k] = counts.get(k, 0) + 1
             rids = (s.meta or {}).get("rids")
             if s.stage == "submit" and s.rid is not None:
                 submit_t[s.rid] = s.t0

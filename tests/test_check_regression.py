@@ -1,0 +1,106 @@
+"""Tests for the bench-regression CI gate (benchmarks/check_regression.py).
+
+The checker is a script, not a package module, so it is loaded by path.
+"""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks", "check_regression.py")
+
+
+@pytest.fixture(scope="module")
+def cr():
+    spec = importlib.util.spec_from_file_location("check_regression", _PATH)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _payload(*, replicas_qps=1000.0, cache_qps=2000.0, routing_qps=3000.0,
+             capacity_qps=1500.0):
+    return {
+        "results": [
+            {"name": "fig13_replicas_4", "achieved_qps": replicas_qps},
+            # machine-dependent points the gate must ignore
+            {"name": "fig13_load_1x", "us_per_call": 1e4},
+            {"name": "fig13_pipeline_overlap", "sync_s": 1.0},
+        ],
+        "cache": [{"repeat_alpha": 1.1, "cached": True,
+                   "effective_qps": cache_qps}],
+        "routing": [{"scenario": "straggler", "policy": "hit_aware",
+                     "effective_qps": routing_qps}],
+        "capacity": [
+            {"profile": "weak_host", "controlled_qps": capacity_qps,
+             "best_static_qps": capacity_qps * 1.01},
+            {"cost_report": {"rows": []}},   # no profile: must be skipped
+        ],
+    }
+
+
+def test_collect_metrics_covers_sections_and_skips_noise(cr):
+    m = cr.collect_metrics(_payload())
+    assert m["replicas[fig13_replicas_4].achieved_qps"] == 1000.0
+    assert m["cache[alpha=1.1,on].effective_qps"] == 2000.0
+    assert m["routing[straggler/hit_aware].effective_qps"] == 3000.0
+    assert m["capacity[weak_host].controlled_qps"] == 1500.0
+    assert not any("fig13_load" in k or "pipeline_overlap" in k for k in m)
+
+
+def test_within_tolerance_passes(cr):
+    base = _payload()
+    fresh = _payload(replicas_qps=900.0, routing_qps=2600.0)  # -10%, -13%
+    assert cr.compare(base, fresh, 0.15) == []
+
+
+def test_regression_fails_and_names_the_section(cr):
+    base = _payload()
+    fresh = _payload(routing_qps=2000.0)     # -33%, well past 15%
+    failures = cr.compare(base, fresh, 0.15)
+    assert len(failures) == 1
+    assert "routing[straggler/hit_aware]" in failures[0]
+    assert "REGRESSION" in failures[0]
+
+
+def test_missing_baseline_metric_fails(cr):
+    base = _payload()
+    fresh = _payload()
+    del fresh["cache"]
+    failures = cr.compare(base, fresh, 0.15)
+    assert any("MISSING cache[alpha=1.1,on]" in f for f in failures)
+
+
+def test_new_fresh_metric_is_tolerated(cr):
+    base = _payload()
+    del base["routing"]           # baseline predates the routing sweep
+    fresh = _payload()
+    assert cr.compare(base, fresh, 0.15) == []
+
+
+def test_main_exit_codes(cr, tmp_path):
+    base_p = tmp_path / "base.json"
+    fresh_p = tmp_path / "fresh.json"
+    base_p.write_text(json.dumps(_payload()))
+    fresh_p.write_text(json.dumps(_payload()))
+    assert cr.main(["--baseline", str(base_p),
+                    "--fresh", str(fresh_p)]) == 0
+    fresh_p.write_text(json.dumps(_payload(cache_qps=100.0)))
+    assert cr.main(["--baseline", str(base_p),
+                    "--fresh", str(fresh_p)]) == 1
+
+
+def test_gate_accepts_the_committed_baseline_against_itself(cr):
+    """The committed BENCH_endtoend.json must pass its own gate — the
+    exact comparison CI makes when nothing changed."""
+    path = os.path.join(os.path.dirname(_PATH), "..",
+                        "BENCH_endtoend.json")
+    if not os.path.exists(path):
+        pytest.skip("no committed baseline")
+    with open(path) as f:
+        payload = json.load(f)
+    assert cr.compare(payload, payload, 0.15) == []
+    assert cr.collect_metrics(payload), \
+        "committed baseline carries no comparable metrics"

@@ -103,8 +103,9 @@ def test_tie_break_round_robin_cycles_replicas():
     run = group.open()
     picks = [run._route(type("PB", (), {"requests": sim_requests(1)})())
              for _ in range(6)]
-    assert [i for i, _ in picks] == [0, 1, 2, 0, 1, 2]
-    assert all(reason == "tie_break" for _, reason in picks)
+    assert [i for i, _, _ in picks] == [0, 1, 2, 0, 1, 2]
+    assert all(reason == "tie_break" for _, reason, _ in picks)
+    assert all(owner is None for _, _, owner in picks)
 
 
 # ---------------------------------------------------------------------------
@@ -234,3 +235,224 @@ def test_mesh_replicas_bit_identical_on_two_devices():
     by_sync = {c.rid: c for c in sync}
     for c in sharded:
         np.testing.assert_array_equal(by_sync[c.rid].tokens, c.tokens)
+
+
+# ---------------------------------------------------------------------------
+# hit-aware routing: cache-ownership affinity with a straggler guard
+# ---------------------------------------------------------------------------
+
+def _fast_servers(n, **kw):
+    kw.setdefault("host_ms_per_batch", 0.0)
+    kw.setdefault("device_ms_per_batch", 0.0)
+    return [SimServer(**kw) for _ in range(n)]
+
+
+def _owned_cache(reqs, replica, *, ttl=1.0, expire_at=10.0):
+    """A cache whose every key is an expired tombstone owned by
+    ``replica`` — the state hit_aware routing sees when content must be
+    recomputed."""
+    from repro.serve import CacheConfig, CachedResult, ResultCache, \
+        request_key
+    cache = ResultCache(CacheConfig(ttl=ttl))
+    ref = SimServer()
+    for r in reqs:
+        cache.put(request_key(r),
+                  CachedResult.of(ref.generate_batch([r])[0],
+                                  replica=replica, now=0.0))
+        assert cache.get(request_key(r), expire_at) is None
+    return cache
+
+
+def test_hit_aware_without_cache_decision_identical_to_least_loaded():
+    """No cache (or an empty one): hit_aware must make exactly the
+    decisions least_loaded would, including round-robin tie-break state."""
+    from repro.serve import CacheConfig, ResultCache
+    ga = EngineGroup.from_servers(_fast_servers(3), routing="hit_aware")
+    gb = EngineGroup.from_servers(_fast_servers(3), routing="least_loaded")
+    runs = [ga.open(), ga.open(cache=ResultCache(CacheConfig())),
+            gb.open()]
+    pb = type("PB", (), {"requests": sim_requests(2)})()
+    for loads in ([0, 0, 0], [5, 1, 3], [2, 2, 9], [7, 7, 7], [0, 4, 0]):
+        picks = []
+        for run in runs:
+            run._outstanding = list(loads)
+            picks.append(run._route(pb))
+        assert picks[0] == picks[1] == picks[2]
+        assert picks[0][1] in ("least_loaded", "tie_break")
+        assert picks[0][2] is None
+
+
+def test_hit_aware_prefers_owning_replica_for_expired_content():
+    """Tombstone affinity: the recompute of TTL-expired content routes to
+    the replica that produced the original result."""
+    reqs = sim_requests(2, rid_base=0, content_seed=3)
+    cache = _owned_cache(reqs, replica=2)
+    group = EngineGroup.from_servers(_fast_servers(3), routing="hit_aware")
+    run = group.open(cache=cache)
+    fresh = sim_requests(2, rid_base=100, content_seed=3)  # same content
+    pb = type("PB", (), {"requests": fresh})()
+    assert run._route(pb) == (2, "affinity_hit", 2)
+
+
+def test_hit_aware_spills_on_straggler_ewma_and_rehomes():
+    """An owner whose latency EWMA marks it a straggler loses its
+    affinity: the batch spills to the least-loaded healthy replica and
+    the keys are re-homed there, so the next recompute follows the work."""
+    from repro.serve import request_key
+    reqs = sim_requests(2, rid_base=0, content_seed=5)
+    cache = _owned_cache(reqs, replica=0)
+    group = EngineGroup.from_servers(_fast_servers(3), routing="hit_aware",
+                                     straggler_factor=2.0)
+    run = group.open(cache=cache)
+    run._ewma = [0.02, 0.001, 0.001]        # replica 0 is 20x the others
+    fresh = sim_requests(2, rid_base=100, content_seed=5)
+    pb = type("PB", (), {"requests": fresh})()
+    idx, reason, owner = run._route(pb)
+    assert reason == "affinity_spill" and owner == 0 and idx != 0
+    assert cache.owner_hint(request_key(fresh[0])) == idx
+    assert cache.stats()["affinity_rehomes"] == len(fresh)
+    # re-homed: the same content now affinity-hits its new replica
+    assert run._route(pb) == (idx, "affinity_hit", idx)
+
+
+def test_hit_aware_spills_on_outstanding_gap():
+    """A healthy owner still spills when its outstanding-work gap over
+    the least-loaded candidate exceeds spill_threshold (and holds the
+    batch when it doesn't)."""
+    reqs = sim_requests(2, rid_base=0, content_seed=9)
+    fresh = sim_requests(2, rid_base=100, content_seed=9)
+    pb = type("PB", (), {"requests": fresh})()
+    tight = EngineGroup.from_servers(_fast_servers(3), routing="hit_aware",
+                                     spill_threshold=5)
+    run = tight.open(cache=_owned_cache(reqs, replica=0))
+    run._outstanding = [10, 0, 0]
+    idx, reason, owner = run._route(pb)
+    assert reason == "affinity_spill" and owner == 0 and idx in (1, 2)
+    loose = EngineGroup.from_servers(_fast_servers(3), routing="hit_aware",
+                                     spill_threshold=96)
+    run2 = loose.open(cache=_owned_cache(reqs, replica=0))
+    run2._outstanding = [10, 0, 0]
+    assert run2._route(pb) == (0, "affinity_hit", 0)
+
+
+def test_delay_injector_straggler_shows_in_ewma():
+    """The per-replica EWMA fed by worker batch timings must mark a
+    DelayInjector-delayed replica as the straggler."""
+    group = EngineGroup.from_servers(
+        _fast_servers(2, device_ms_per_batch=1.0), routing="hit_aware",
+        delay=DelayInjector({0: 0.05}))     # +50 ms per batch on replica 0
+    run = group.open().start()
+    for i in range(4):
+        run.dispatch(group.prepare_batch(sim_requests(2, rid_base=i * 10)))
+    run.finish()
+    e = run.replica_ewma()
+    assert e[0] is not None and e[1] is not None
+    assert e[0] > group.straggler_factor * e[1]
+    with run._lock:
+        assert run._is_straggler_locked(0, 2)
+        assert not run._is_straggler_locked(1, 2)
+
+
+def test_ewma_persists_across_runs_on_the_group():
+    """The straggler EWMA lives on the EngineGroup: a slow replica
+    identified in one run still repels hit_aware traffic in the next run
+    (runs are often shorter than the straggler's first batch)."""
+    group = EngineGroup.from_servers(
+        _fast_servers(2, device_ms_per_batch=1.0), routing="hit_aware",
+        delay=DelayInjector({0: 0.05}))
+    run = group.open().start()
+    for i in range(4):
+        run.dispatch(group.prepare_batch(sim_requests(2, rid_base=i * 10)))
+    run.finish()
+    run2 = group.open().start()
+    e = run2.replica_ewma()             # before run2 executes anything
+    assert e[0] is not None and e[0] > group.straggler_factor * e[1]
+    with run2._lock:
+        assert run2._is_straggler_locked(0, 2)
+    run2.finish()
+
+
+def test_hit_aware_end_to_end_spill_under_delay_injector():
+    """Every key starts owned by a DelayInjector-straggled replica 0:
+    hit_aware must spill most recomputes to the healthy replica, re-home
+    the keys, and still complete the full stream."""
+    import numpy as np
+    from repro.serve import CachedResult, request_key
+    # enough batches that the post-EWMA regime (replica 0 confirmed as a
+    # straggler after its first ~51 ms batch) dominates the early
+    # gap-guard alternation
+    n = 32
+    cache_cfg = {"ttl": 5.0}
+    srv = build(ServeConfig(
+        server_factory=lambda i: SimServer(host_ms_per_batch=0.0,
+                                           device_ms_per_batch=1.0),
+        replicas=2, routing="hit_aware", spill_threshold=8,
+        target_batch=2, deadline=0.01, cache=cache_cfg,
+        delay=DelayInjector({0: 0.05})))
+    seed_reqs = sim_requests(n, rid_base=0, content_seed=13,
+                             arrivals=np.arange(n) * 1e-3)
+    ref = SimServer()
+    for r in seed_reqs:
+        srv.cache.put(request_key(r),
+                      CachedResult.of(ref.generate_batch([r])[0],
+                                      replica=0, now=0.0))
+    # logical arrivals 20s later: every entry is stale (ttl 5), leaving
+    # replica-0 tombstones, so all n leaders recompute with affinity
+    wave = sim_requests(n, rid_base=100, content_seed=13,
+                        arrivals=20.0 + np.arange(n) * 1e-3)
+    outs = srv.serve(wave, mode="pipelined")
+    assert len(outs) == n
+    rep = srv.report()
+    assert rep.affinity_hits + rep.affinity_spills \
+        == len(rep.batch_sizes)                 # every batch had an owner
+    assert rep.affinity_spills > 0              # the straggler lost work
+    assert srv.cache.stats()["affinity_rehomes"] > 0
+    assert rep.per_replica[1].n_batches > rep.per_replica[0].n_batches
+
+
+def test_hit_aware_knob_validation():
+    with pytest.raises(ValueError, match="spill_threshold"):
+        EngineGroup.from_servers([SimServer()], spill_threshold=-1)
+    with pytest.raises(ValueError, match="straggler_factor"):
+        EngineGroup.from_servers([SimServer()], straggler_factor=0.5)
+    with pytest.raises(ValueError, match="ewma_alpha"):
+        SchedulerConfig(ewma_alpha=0.0)
+    with pytest.raises(ValueError, match="spill_threshold"):
+        SchedulerConfig(spill_threshold=-2)
+
+
+@pytest.mark.parametrize("routing", ["least_loaded", "sticky", "hit_aware"])
+def test_every_policy_bit_identical_to_sync_with_warm_recomputes(routing):
+    """All three routing policies only move *placement*: two waves of the
+    same content (the second recomputed after TTL expiry, at warm-content
+    device costs) stay bit-identical per rid to the single-replica sync
+    baseline. Warmth changes time, never bits."""
+    def factory(i):
+        return SimServer(host_ms_per_batch=0.0, device_ms_per_batch=0.5,
+                         device_ms_per_token=0.05, warm_factor=0.25)
+
+    def wave(rid_base, t0):
+        n = 12
+        return sim_requests(n, rid_base=rid_base, content_seed=11,
+                            arrivals=t0 + np.arange(n) * 1e-3)
+
+    srv = build(ServeConfig(server_factory=factory, replicas=3,
+                            routing=routing, target_batch=4, deadline=0.01,
+                            cache={"ttl": 5.0}))
+    w1 = srv.serve(wave(0, 0.0), mode="pipelined")
+    # 20s of logical time later: every wave-1 entry is stale, so wave 2
+    # recomputes through the router (hit_aware sees tombstone owners)
+    w2 = srv.serve(wave(100, 20.0), mode="pipelined")
+    ref_srv = build(ServeConfig(server_factory=factory, replicas=1,
+                                target_batch=4, deadline=0.01))
+    ref = {c.rid: c for c in ref_srv.serve(wave(0, 0.0), mode="sync")}
+    assert len(w1) == len(w2) == len(ref) == 12
+    for c in w1:
+        np.testing.assert_array_equal(ref[c.rid].tokens, c.tokens)
+        assert ref[c.rid].truncated == c.truncated
+    for c in w2:
+        np.testing.assert_array_equal(ref[c.rid - 100].tokens, c.tokens)
+        assert ref[c.rid - 100].truncated == c.truncated
+    if routing == "hit_aware":
+        rep = srv.report()
+        assert rep.affinity_hits + rep.affinity_spills > 0

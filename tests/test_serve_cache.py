@@ -548,3 +548,86 @@ def test_coalescer_disabled_still_tracks_cache_fill():
     k, followers = co.resolve(0)
     assert k == key and followers == []
     assert co.in_flight() == 0
+
+
+# -- replica affinity (hit_aware routing support) -----------------------------
+
+def test_ttl_expiry_leaves_affinity_tombstone():
+    """A TTL-expired entry forgets its *result* but not its *placement*:
+    owner_hint survives as a tombstone so hit_aware routing can send the
+    recompute back to the replica that produced it."""
+    cache = ResultCache(CacheConfig(ttl=1.0))
+    r = _req(1, [3, 5, 7])
+    key = request_key(r)
+    comp = SimServer().generate_batch([r])[0]
+    cache.put(key, CachedResult.of(comp, replica=2, now=0.0))
+    assert cache.owner_hint(key) == 2          # live entry's producer
+    assert cache.get(key, 10.0) is None        # expired
+    assert len(cache) == 0
+    assert cache.owner_hint(key) == 2          # tombstone survives
+    assert cache.stats()["affinity_entries"] == 1
+
+
+def test_put_supersedes_affinity_tombstone():
+    """A fresh live entry is the authoritative owner record: it clears any
+    tombstone so a later expiry can't resurrect a stale owner."""
+    cache = ResultCache(CacheConfig(ttl=1.0))
+    r = _req(1, [3, 5, 7])
+    key = request_key(r)
+    comp = SimServer().generate_batch([r])[0]
+    cache.put(key, CachedResult.of(comp, replica=0, now=0.0))
+    assert cache.get(key, 10.0) is None        # tombstone -> replica 0
+    cache.put(key, CachedResult.of(comp, replica=1, now=10.0))
+    assert cache.stats()["affinity_entries"] == 0
+    assert cache.owner_hint(key) == 1          # live entry wins
+    assert cache.get(key, 20.0) is None        # re-expiry tombstones 1
+    assert cache.owner_hint(key) == 1
+
+
+def test_rehome_moves_owner_and_counts():
+    cache = ResultCache(CacheConfig(ttl=1.0))
+    r = _req(1, [3, 5, 7])
+    key = request_key(r)
+    comp = SimServer().generate_batch([r])[0]
+    cache.put(key, CachedResult.of(comp, replica=0, now=0.0))
+    assert cache.get(key, 5.0) is None
+    cache.rehome(key, 3)
+    assert cache.owner_hint(key) == 3
+    assert cache.stats()["affinity_rehomes"] == 1
+
+
+def test_affinity_map_is_bounded_and_disableable():
+    cache = ResultCache(CacheConfig(ttl=1.0, max_affinity=2))
+    comp = SimServer().generate_batch([_req(1, [1])])[0]
+    keys = []
+    for i in range(4):
+        r = _req(i, [i, i + 1, i + 2])
+        keys.append(request_key(r))
+        cache.put(keys[-1], CachedResult.of(comp, replica=i, now=0.0))
+        assert cache.get(keys[-1], 5.0) is None     # expire -> tombstone
+    assert cache.stats()["affinity_entries"] == 2   # LRU-bounded
+    assert cache.owner_hint(keys[0]) is None        # oldest evicted
+    assert cache.owner_hint(keys[3]) == 3
+    off = ResultCache(CacheConfig(ttl=1.0, max_affinity=0))
+    off.put(keys[0], CachedResult.of(comp, replica=1, now=0.0))
+    assert off.get(keys[0], 5.0) is None
+    assert off.owner_hint(keys[0]) is None          # tombstones disabled
+
+
+def test_owner_hint_does_not_touch_lru_or_counters():
+    """Routing probes must not keep entries artificially fresh or skew
+    hit/miss accounting."""
+    cache = ResultCache(CacheConfig())
+    ra, rb = _req(1, [1, 2, 3]), _req(2, [4, 5, 6])
+    ka, kb = request_key(ra), request_key(rb)
+    comp = SimServer().generate_batch([ra])[0]
+    cache.put(ka, CachedResult.of(comp, replica=0, now=0.0))
+    cache.put(kb, CachedResult.of(comp, replica=1, now=0.0))
+    before = cache.stats()
+    for _ in range(5):
+        assert cache.owner_hint(ka) == 0
+    after = cache.stats()
+    assert after["hits"] == before["hits"]
+    assert after["misses"] == before["misses"]
+    # ka was probed 5x but kb must still be the most-recently-used entry
+    assert next(iter(cache._entries)) == ka
